@@ -1,0 +1,66 @@
+"""CPU-contention model for the paper's stress-ng experiments.
+
+The paper's server: one 4-core/8-thread E5-1620 v4 ("full CPU utilization
+is 800%"); stress-ng occupies {0, 40, 80}% of it.  This container has one
+core, so instead of re-measuring under real contention we measure the CPU
+*work* once and replay it through an availability model:
+
+  C(o)     = 8 * (1 - o)                    available hw threads
+  demand   = 1 client thread + k compaction threads (device: ~0.3 -- the
+             coordinator share LUDA leaves on the CPU)
+  u        = min(1, C / demand)             fair per-thread speed factor
+  T_total  = (W_f + W_fl) / u  +  W_c / (k_eff * u)  +  D_device
+
+W_f / W_c are wall-measured on this host; D_device comes from the TPU
+roofline model (lsm/cpu_engine.model_device_seconds).  Demand-based
+sharing reproduces the paper's mechanism and ordering: the 4-thread
+RocksDB demands 5 threads and collapses hardest when only 1.6 remain
+(paper Fig. 7: ~30% of its uncontended throughput at 80%), LevelDB
+degrades moderately, and the offloaded store keeps ~its full speed
+because its CPU demand is just the coordinator.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+EPS = 0.1
+FULL_THREADS = 8.0
+DEVICE_COORD_THREADS = 0.3     # LUDA's residual host demand
+CLIENT_THREADS = 2.0           # YCSB client demand (paper: multi-threaded)
+
+
+@dataclasses.dataclass
+class MeasuredRun:
+    """Raw measurements from one workload execution."""
+    n_ops: int
+    foreground_seconds: float        # client get/put host work
+    compact_host_seconds: float      # compaction work done on host CPU
+    compact_device_seconds: float    # modeled accelerator seconds
+    flush_host_seconds: float = 0.0
+    read_latencies_us: list = dataclasses.field(default_factory=list)
+    write_latencies_us: list = dataclasses.field(default_factory=list)
+
+
+def simulate(run: MeasuredRun, *, overhead: float, engine: str,
+             threads: int = 1) -> dict:
+    c = max(FULL_THREADS * (1.0 - overhead), EPS)
+    k = DEVICE_COORD_THREADS if engine == "device" else float(threads)
+    u = min(1.0, c / (CLIENT_THREADS + k))
+    fore = (run.foreground_seconds + run.flush_host_seconds) / u
+    if engine == "device":
+        comp = run.compact_host_seconds / u + run.compact_device_seconds
+    else:
+        comp = run.compact_host_seconds / (k * u)
+    total = fore + comp
+    return {
+        "seconds": total,
+        "ops_per_sec": run.n_ops / total,
+        "avg_read_us": _mean(run.read_latencies_us) / u,
+        "avg_write_us": _mean(run.write_latencies_us) / u,
+        "compaction_seconds": comp,
+    }
+
+
+def _mean(xs):
+    return sum(xs) / len(xs) if xs else 0.0

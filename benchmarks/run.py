@@ -1,0 +1,72 @@
+"""Benchmark harness: one entry per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run [--records N] [--quick]
+
+Prints ``name,us_per_call,derived`` CSV.  Figures map per DESIGN.md §8:
+
+  fig7  ycsb.throughput.<store>.v<value>.o<overhead>   (ops/s)
+  fig8  ycsb.runtime.<store>.v<value>.o<overhead>      (seconds)
+  fig9  ycsb.latency.{read,write}.<store>...           (us)
+  fig11 ycsb.compact_bytes.<store>.v<value>            (bytes r+w)
+  fig12 ycsb.p99.<store>.v<value>.w<window>            (us)
+  kernels / pipeline microbenches
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+
+
+def emit(name, us, derived=""):
+    print(f"{name},{us:.2f},{derived}")
+    sys.stdout.flush()
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--records", type=int, default=3000)
+    ap.add_argument("--operations", type=int, default=3000)
+    ap.add_argument("--quick", action="store_true",
+                    help="kernel benches only")
+    ap.add_argument("--value-sizes", type=int, nargs="+",
+                    default=[128, 256, 1024])
+    args = ap.parse_args()
+
+    from benchmarks.kernel_bench import bench_kernels
+    for name, us, derived in bench_kernels():
+        emit(name, us, derived)
+    if args.quick:
+        return
+
+    from benchmarks.ycsb_bench import p99_timeline, sweep
+    rows = sweep(args.records, args.operations,
+                 value_sizes=tuple(args.value_sizes))
+    for r in rows:
+        tag = f"{r['store']}.v{r['value_size']}.o{int(r['overhead']*100)}"
+        # fig 7: throughput
+        emit(f"ycsb.throughput.{tag}", 1e6 / r["ops_per_sec"],
+             f"ops_per_sec={r['ops_per_sec']:.0f}")
+        # fig 8: running time
+        emit(f"ycsb.runtime.{tag}", r["seconds"] * 1e6,
+             f"seconds={r['seconds']:.3f}")
+        # fig 9: average latencies
+        emit(f"ycsb.latency.read.{tag}", r["avg_read_us"], "")
+        emit(f"ycsb.latency.write.{tag}", r["avg_write_us"], "")
+        if r["overhead"] == 0.0:
+            # fig 11: compaction processed data size (machine-independent)
+            emit(f"ycsb.compact_bytes.{r['store']}.v{r['value_size']}",
+                 0.0,
+                 f"bytes_in={r['compact_bytes_in']};"
+                 f"bytes_out={r['compact_bytes_out']};"
+                 f"compactions={r['compactions']};"
+                 f"dropped={r['entries_dropped']}")
+            # fig 12: p99 timeline
+            if r["stamps"]:
+                for t_mid, p99 in p99_timeline(r["stamps"], n_windows=10):
+                    emit(f"ycsb.p99.{r['store']}.v{r['value_size']}"
+                         f".t{t_mid:.1f}", p99, "")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,114 @@
+"""YCSB measurement harness behind the paper's figures (7, 8, 9, 11, 12).
+
+One measured run per (engine, value_size); the contention model expands
+each measurement to the paper's {0, 40, 80}% CPU-overhead grid.
+"""
+
+from __future__ import annotations
+
+import shutil
+import tempfile
+import time
+
+from benchmarks.contention import MeasuredRun, simulate
+from repro.configs.luda_paper import bench_geometry
+from repro.core.scheduler import SchedulerConfig
+from repro.data.ycsb import WorkloadSpec, YCSBWorkload
+from repro.lsm.db import DBConfig, LsmDB
+
+ENGINES = {
+    # name -> (engine, modeled compaction threads)
+    "leveldb-cpu": ("cpu", 1),
+    "rocksdb-cpu-4t": ("cpu", 4),
+    "luda-tpu": ("device", 1),
+}
+
+
+def measure(engine: str, value_size: int, records: int, operations: int,
+            seed: int = 42, warmup: bool = True
+            ) -> tuple[MeasuredRun, dict]:
+    if warmup:
+        # populate jit caches at the same workload size (device-engine
+        # compile time must not count as compaction work -- on the real
+        # system kernels are compiled once per geometry at store open)
+        measure(engine, value_size, records, operations, seed=seed,
+                warmup=False)
+    path = tempfile.mkdtemp(prefix=f"bench-{engine}-{value_size}-")
+    db = LsmDB(path, DBConfig(
+        geom=bench_geometry(value_size), engine=engine,
+        memtable_bytes=64 * 1024,
+        scheduler=SchedulerConfig(l0_trigger=4, base_bytes=512 * 1024)))
+    spec = WorkloadSpec.ycsb_a(records=records, operations=operations,
+                               value_size=value_size, seed=seed)
+    wl = YCSBWorkload(spec)
+    try:
+        for op, key, val in wl.load_ops():
+            db.put(key, val)
+        read_lat, write_lat = [], []
+        stamps = []
+        t_run0 = time.perf_counter()
+        for op, key, val in wl.run_ops():
+            t0 = time.perf_counter()
+            if op == "read":
+                db.get(key)
+            else:
+                db.put(key, val)
+            dt_us = (time.perf_counter() - t0) * 1e6
+            (read_lat if op == "read" else write_lat).append(dt_us)
+            stamps.append((time.perf_counter() - t_run0, op, dt_us))
+        t_run = time.perf_counter() - t_run0
+        s = db.stats
+        fore = t_run - s.compact_host_seconds - s.flush_host_seconds
+        run = MeasuredRun(
+            n_ops=operations,
+            foreground_seconds=max(fore, 1e-9),
+            compact_host_seconds=s.compact_host_seconds,
+            compact_device_seconds=s.compact_device_seconds,
+            flush_host_seconds=s.flush_host_seconds,
+            read_latencies_us=read_lat, write_latencies_us=write_lat)
+        extras = {
+            "compact_bytes_in": s.compact_bytes_in,
+            "compact_bytes_out": s.compact_bytes_out,
+            "compactions": s.compactions,
+            "entries_dropped": s.compact_entries_dropped,
+            "stamps": stamps,
+        }
+        return run, extras
+    finally:
+        db.close()
+        shutil.rmtree(path)
+
+
+def sweep(records: int, operations: int, value_sizes=(128, 256, 1024),
+          overheads=(0.0, 0.4, 0.8)):
+    """Measure every (engine x value); simulate every overhead level.
+    Returns rows of dicts."""
+    rows = []
+    for name, (engine, threads) in ENGINES.items():
+        for vs in value_sizes:
+            run, extras = measure(engine, vs, records, operations)
+            for o in overheads:
+                sim = simulate(run, overhead=o, engine=engine,
+                               threads=threads)
+                rows.append({
+                    "store": name, "value_size": vs, "overhead": o,
+                    **sim, **{k: v for k, v in extras.items()
+                              if k != "stamps"},
+                    "stamps": extras["stamps"] if o == 0.0 else None,
+                })
+    return rows
+
+
+def p99_timeline(stamps, n_windows: int = 20):
+    """[(t_mid, p99_us)] over the run (paper Fig. 12)."""
+    if not stamps:
+        return []
+    t_end = stamps[-1][0]
+    out = []
+    for w in range(n_windows):
+        lo, hi = w * t_end / n_windows, (w + 1) * t_end / n_windows
+        lat = sorted(dt for t, _, dt in stamps if lo <= t < hi)
+        if lat:
+            out.append((0.5 * (lo + hi),
+                        lat[min(len(lat) - 1, int(0.99 * len(lat)))]))
+    return out

@@ -1,0 +1,60 @@
+"""Serving driver: batched requests against a small LM with LSM-paged
+KV sessions (generate -> page out -> reload -> continue).
+
+    PYTHONPATH=src python examples/serve_demo.py
+"""
+
+import shutil
+import tempfile
+
+import jax
+import numpy as np
+
+from repro.configs import get_smoke_config
+from repro.core.formats import SSTGeometry
+from repro.lsm.db import DBConfig, LsmDB
+from repro.models import model
+from repro.serving.engine import ServeEngine
+
+
+def main():
+    cfg = get_smoke_config("qwen3-14b").with_(
+        n_layers=4, d_model=128, n_heads=4, kv_heads=2, d_ff=256,
+        vocab=2048, head_dim=32)
+    params = model.init(jax.random.key(0), cfg)
+    page_dir = tempfile.mkdtemp(prefix="kv-pages-")
+    store = LsmDB(page_dir, DBConfig(
+        geom=SSTGeometry(key_bytes=16, value_bytes=4096,
+                         block_bytes=32 * 1024, sst_bytes=512 * 1024),
+        engine="device", memtable_bytes=256 * 1024))
+    eng = ServeEngine(cfg, params, max_len=96, page_store=store)
+
+    rng = np.random.default_rng(0)
+    prompts = rng.integers(0, cfg.vocab, (4, 12)).astype(np.int32)
+    print("batched generation: 4 requests x 16 new tokens")
+    out, cache, pos = eng.generate(prompts, max_new=16)
+    for i, row in enumerate(out):
+        print(f"  req{i}: {row.tolist()}")
+
+    print("paging session to the LSM store ...")
+    n = eng.save_session("demo", cache, pos)
+    print(f"  {n} KV records written; store stats: "
+          f"flushes={store.stats.flushes}")
+    cache2, pos2 = eng.load_session("demo")
+    ok = all(bool((np.asarray(a) == np.asarray(b)).all())
+             for a, b in zip(jax.tree.leaves(cache),
+                             jax.tree.leaves(cache2)))
+    print(f"  reloaded bit-exact: {ok}")
+
+    store.flush()
+    store.maybe_compact()
+    print(f"  compactions={store.stats.compactions} "
+          f"(modeled device time "
+          f"{store.stats.compact_device_seconds*1e3:.2f} ms)")
+    store.close()
+    shutil.rmtree(page_dir)
+    print("ok")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,64 @@
+"""YCSB-A on the LUDA store vs the CPU baseline (the paper's §IV setup,
+scaled to this container).
+
+    PYTHONPATH=src python examples/ycsb_demo.py [--records 5000]
+"""
+
+import argparse
+import shutil
+import tempfile
+import time
+
+from repro.configs.luda_paper import bench_geometry
+from repro.core.scheduler import SchedulerConfig
+from repro.data.ycsb import WorkloadSpec, YCSBWorkload
+from repro.lsm.db import DBConfig, LsmDB
+
+
+def run(engine: str, spec: WorkloadSpec):
+    path = tempfile.mkdtemp(prefix=f"ycsb-{engine}-")
+    db = LsmDB(path, DBConfig(
+        geom=bench_geometry(spec.value_size), engine=engine,
+        memtable_bytes=64 * 1024,
+        scheduler=SchedulerConfig(l0_trigger=4, base_bytes=512 * 1024)))
+    wl = YCSBWorkload(spec)
+    t0 = time.perf_counter()
+    for op, key, val in wl.load_ops():
+        db.put(key, val)
+    t_load = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    reads = hits = 0
+    for op, key, val in wl.run_ops():
+        if op == "read":
+            reads += 1
+            hits += db.get(key) is not None
+        else:
+            db.put(key, val)
+    t_run = time.perf_counter() - t0
+    s = db.stats
+    print(f"[{engine}] load {spec.records} ops in {t_load:.2f}s | "
+          f"run {spec.operations} ops in {t_run:.2f}s "
+          f"({spec.operations/t_run:,.0f} ops/s wall)")
+    print(f"[{engine}] compactions={s.compactions} "
+          f"bytes={s.compact_bytes_in:,}/{s.compact_bytes_out:,} "
+          f"host={s.compact_host_seconds:.2f}s "
+          f"modeled-device={s.compact_device_seconds*1e3:.2f}ms "
+          f"read-hit={hits}/{reads}")
+    db.close()
+    shutil.rmtree(path)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--records", type=int, default=4000)
+    ap.add_argument("--value-size", type=int, default=256)
+    args = ap.parse_args()
+    spec = WorkloadSpec.ycsb_a(records=args.records,
+                               operations=args.records,
+                               value_size=args.value_size)
+    for engine in ("cpu", "device"):
+        run(engine, spec)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,81 @@
+"""Logical sharding annotations for model code.
+
+Model code stays mesh-agnostic: it calls ``constrain(x, "dp", None, "tp")``
+with *logical* axes; when a mesh context is active (set by the step
+builders at trace time) these become ``with_sharding_constraint`` on the
+concrete mesh, otherwise they are no-ops (single-device tests).
+
+``constrain`` is divisibility-aware: a logical axis that does not divide
+the corresponding dimension is dropped (e.g. gemma3's 8 heads on a 16-wide
+model axis, or batch=1 on the data axes) -- the constraint degrades to
+replication instead of erroring, which is exactly the fallback the
+partitioner would need anyway.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import threading
+
+import jax
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
+
+_TLS = threading.local()
+
+
+def _ctx():
+    return getattr(_TLS, "ctx", None)
+
+
+@contextlib.contextmanager
+def mesh_annotations(mesh):
+    dp = tuple(a for a in mesh.axis_names if a in ("pod", "data"))
+    old = _ctx()
+    _TLS.ctx = {"mesh": mesh, "dp": dp}
+    try:
+        yield
+    finally:
+        _TLS.ctx = old
+
+
+def active() -> bool:
+    return _ctx() is not None
+
+
+def axis_size(logical: str) -> int:
+    c = _ctx()
+    if c is None:
+        return 1
+    mesh = c["mesh"]
+    if logical == "tp":
+        return mesh.shape["model"]
+    if logical == "dp":
+        n = 1
+        for a in c["dp"]:
+            n *= mesh.shape[a]
+        return n
+    return 1
+
+
+def constrain(x, *axes):
+    """axes: one logical entry per dim: "dp" | "tp" | None."""
+    c = _ctx()
+    if c is None:
+        return x
+    mesh = c["mesh"]
+    assert len(axes) == x.ndim, (axes, x.shape)
+    spec = []
+    for dim, a in zip(x.shape, axes):
+        if a is None:
+            spec.append(None)
+        elif a == "tp":
+            spec.append("model" if dim % mesh.shape["model"] == 0 else None)
+        elif a == "dp":
+            n = axis_size("dp")
+            spec.append(c["dp"] if (n and dim % n == 0 and c["dp"])
+                        else None)
+        else:
+            raise ValueError(a)
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(mesh, P(*spec)))

@@ -1,0 +1,60 @@
+"""Failure supervision + elastic restart.
+
+``Supervisor`` runs a Trainer, catches worker failures (simulated or
+real), and restarts from the newest checkpoint -- optionally onto a
+*smaller or larger* mesh (elastic restart: checkpoints are mesh-agnostic,
+data is step-indexed, so the resumed run is exact).  A heartbeat file
+records liveness for external watchdogs; straggler mitigation at
+cluster scale is: detect the slow/failed host via missed heartbeats,
+drop it, re-mesh, restart from the last step -- which this module
+demonstrates end-to-end at container scale.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import time
+
+from repro.training.train_loop import Trainer, TrainLoopConfig, TrainResult
+
+
+@dataclasses.dataclass
+class SupervisorConfig:
+    max_restarts: int = 3
+    heartbeat_path: str | None = None
+
+
+class Supervisor:
+    def __init__(self, make_trainer, cfg: SupervisorConfig | None = None):
+        """``make_trainer(attempt) -> Trainer`` -- the factory may return a
+        trainer on a different mesh per attempt (elastic restart)."""
+        self.make_trainer = make_trainer
+        self.cfg = cfg or SupervisorConfig()
+
+    def heartbeat(self, step: int, attempt: int):
+        if self.cfg.heartbeat_path:
+            with open(self.cfg.heartbeat_path, "w") as f:
+                json.dump({"time": time.time(), "step": step,
+                           "attempt": attempt}, f)
+
+    def run(self) -> TrainResult:
+        attempt = 0
+        restarts = 0
+        while True:
+            trainer = self.make_trainer(attempt)
+            try:
+                self.heartbeat(-1, attempt)
+                result = trainer.run()
+                result.restarts = restarts
+                return result
+            except Exception as e:  # worker died
+                restarts += 1
+                attempt += 1
+                if restarts > self.cfg.max_restarts:
+                    raise RuntimeError(
+                        f"exceeded max_restarts={self.cfg.max_restarts}"
+                    ) from e
+                print(f"[supervisor] worker failed ({e}); restart "
+                      f"#{restarts} from last checkpoint", flush=True)

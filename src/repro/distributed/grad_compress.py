@@ -1,0 +1,98 @@
+"""int8 gradient all-reduce with error feedback (bandwidth-bound DP sync).
+
+A fp32 ring all-reduce moves ~2x the gradient bytes per chip.  This module
+implements the compressed equivalent explicitly with ``shard_map``:
+
+  1. quantize the local gradient to int8 (per-tensor max-abs scale),
+     carrying the quantization residual into the next step (error
+     feedback, which keeps SGD/Adam convergence),
+  2. reduce-scatter the int8 payload (all_to_all + local int32 sum),
+  3. re-quantize the reduced shard and all-gather int8.
+
+Bytes on the wire: ~ 2 * size / 4  -- a true 4x reduction vs fp32.
+Offered as an opt-in for pure-DP meshes (``compress_grads=True`` paths);
+the dry-run cells use XLA's native psum so the baseline stays faithful.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental.shard_map import shard_map
+from jax.sharding import Mesh
+from jax.sharding import PartitionSpec as P
+
+
+def quantize(x, err):
+    """(q int8, scale) with error feedback residual."""
+    y = x + err
+    scale = jnp.max(jnp.abs(y)) / 127.0 + 1e-12
+    q = jnp.clip(jnp.round(y / scale), -127, 127).astype(jnp.int8)
+    new_err = y - q.astype(jnp.float32) * scale
+    return q, scale, new_err
+
+
+def _compressed_mean_1d(x, err, axis_name: str, n: int):
+    """x: local fp32 [d] (d divisible by n).  Returns (mean, new_err)."""
+    q, scale, new_err = quantize(x, err)
+    d = x.shape[0]
+    # reduce-scatter: each peer receives one shard of everyone's q
+    qs = q.reshape(n, d // n)
+    qs = jax.lax.all_to_all(qs, axis_name, split_axis=0, concat_axis=0,
+                            tiled=True)
+    scales = jax.lax.all_gather(scale, axis_name)          # [n]
+    # qs: [n, d//n] = peer-major rows of my shard
+    part = (qs.astype(jnp.int32).reshape(n, -1).astype(jnp.float32)
+            * scales[:, None]).sum(0) / n                   # fp32 [d//n]
+    # requantize the reduced shard and all-gather
+    pscale = jnp.max(jnp.abs(part)) / 127.0 + 1e-12
+    pq = jnp.clip(jnp.round(part / pscale), -127, 127).astype(jnp.int8)
+    full_q = jax.lax.all_gather(pq, axis_name)              # [n, d//n]
+    full_s = jax.lax.all_gather(pscale, axis_name)          # [n]
+    mean = (full_q.astype(jnp.float32) * full_s[:, None]).reshape(d)
+    return mean, new_err
+
+
+def compressed_grad_mean(grads, err_tree, mesh: Mesh, axis_name: str):
+    """Mean the replicated gradient pytree across ``axis_name`` with int8
+    compression + error feedback.  Returns (mean_grads, new_err_tree)."""
+    n = mesh.shape[axis_name]
+
+    def per_shard(flat, err):
+        out, errs = [], []
+        for x, e in zip(flat, err):
+            d = x.size
+            pad = (-d) % n
+            xf = jnp.pad(x.reshape(-1).astype(jnp.float32), (0, pad))
+            ef = jnp.pad(e.reshape(-1).astype(jnp.float32), (0, pad))
+            m, ne = _compressed_mean_1d(xf, ef, axis_name, n)
+            out.append(m[:d].reshape(x.shape).astype(x.dtype))
+            errs.append(ne[:d].reshape(x.shape))
+        return tuple(out), tuple(errs)
+
+    flat, treedef = jax.tree.flatten(grads)
+    eflat = jax.tree.leaves(err_tree)
+    specs = tuple(P() for _ in flat)   # replicated per DP shard
+    fn = shard_map(functools.partial(per_shard),
+                   mesh=mesh, in_specs=(specs, specs),
+                   out_specs=(specs, specs), check_rep=False)
+    out, errs = fn(tuple(flat), tuple(eflat))
+    return (jax.tree.unflatten(treedef, out),
+            jax.tree.unflatten(treedef, errs))
+
+
+def init_error_state(grads):
+    return jax.tree.map(lambda g: jnp.zeros(g.shape, jnp.float32), grads)
+
+
+def wire_bytes_fp32(grads) -> int:
+    """Ring all-reduce cost of the uncompressed baseline (per chip)."""
+    total = sum(g.size for g in jax.tree.leaves(grads))
+    return 2 * 4 * total
+
+
+def wire_bytes_compressed(grads) -> int:
+    total = sum(g.size for g in jax.tree.leaves(grads))
+    return 2 * total  # int8 payloads (scales negligible)

@@ -1,0 +1,168 @@
+"""Sharding rules: pytree path -> PartitionSpec.
+
+Strategy (Megatron-style TP + ZeRO-3 FSDP, both expressed as 2D weight
+sharding for the SPMD partitioner):
+
+* "model" axis: attention heads / FFN hidden / expert dim / vocab,
+* FSDP axes (= the data axes): the other large dim of every matrix,
+  so parameters + optimizer state scale with the full chip count
+  (jamba-398B's 4.8 TB of fp32 state fits 512 x 16 GB only this way),
+* vectors (norm scales, biases) replicate.
+
+KV caches shard sequence-slots over "model" (GQA kv_heads of 8 do not
+divide a 16-wide model axis, so head-sharding is not generally available;
+slot sharding scales memory for every arch and XLA partitions the cache
+attention + LSE reductions over it).
+"""
+
+from __future__ import annotations
+
+import jax
+from jax.sharding import Mesh, NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.models.config import ModelConfig
+
+
+def data_axes(mesh: Mesh) -> tuple[str, ...]:
+    return tuple(a for a in mesh.axis_names if a in ("pod", "data"))
+
+
+def model_axis_size(mesh: Mesh) -> int:
+    return mesh.shape["model"]
+
+
+def _path_str(path) -> str:
+    parts = []
+    for p in path:
+        if hasattr(p, "key"):
+            parts.append(str(p.key))
+        elif hasattr(p, "idx"):
+            parts.append(str(p.idx))
+        else:
+            parts.append(str(p))
+    return "/".join(parts)
+
+
+def param_spec(path_str: str, ndim: int, cfg: ModelConfig,
+               mesh: Mesh, *, fsdp: bool = True) -> P:
+    """PartitionSpec for one parameter leaf."""
+    da = data_axes(mesh) if fsdp else ()
+    f = da if da else None      # fsdp axes (possibly ('pod','data'))
+    name = path_str.rsplit("/", 1)[-1]
+    stacked = path_str.startswith(("blocks/", "enc_blocks/"))
+    nm = model_axis_size(mesh)
+
+    def spec(*dims):
+        dims = (None,) * (ndim - len(dims)) + tuple(dims) \
+            if len(dims) < ndim else tuple(dims)
+        if stacked:
+            dims = (None,) + dims[1:] if len(dims) == ndim else dims
+        return P(*dims)
+
+    base = ndim - (1 if stacked else 0)   # logical rank
+
+    # ---- vectors: replicate
+    if base <= 1:
+        return spec(*([None] * ndim))
+
+    if name in ("wq", "wk", "wv"):
+        return spec(*([None] * (ndim - 2)), f, "model")
+    if name == "wo" and "ffn" not in path_str:
+        return spec(*([None] * (ndim - 2)), "model", f)
+    if name == "table" or path_str.endswith("head"):
+        return P("model", f)              # [vocab, d], never stacked
+    if name == "router":
+        return spec(*([None] * (ndim - 2)), f, None)
+    if name in ("wi", "wg", "wo") and base == 3:  # MoE experts [E, d/ff, *]
+        e_ok = cfg.moe_experts and cfg.moe_experts % nm == 0
+        if name == "wo":
+            return spec("model" if e_ok else None,
+                        None if e_ok else "model", f)
+        return spec("model" if e_ok else None, f,
+                    None if e_ok else "model")
+    if name in ("wi", "wg"):              # dense MLP [d, ff]
+        return spec(*([None] * (ndim - 2)), f, "model")
+    if name == "wo":                      # dense MLP out [ff, d]
+        return spec(*([None] * (ndim - 2)), "model", f)
+    # ---- mamba
+    if name == "in_proj":
+        return spec(f, "model")
+    if name == "out_proj":
+        return spec("model", f)
+    if name == "conv_w":
+        return spec(None, "model")
+    if name == "x_proj":
+        return spec("model", None)
+    if name == "dt_w":
+        return spec(None, "model")
+    if name == "A_log":
+        return spec("model", None)
+    if name == "proj":                    # frontend adapter [d, d]
+        return spec(f, None)
+    return spec(*([None] * ndim))
+
+
+def param_specs(abstract_params, cfg: ModelConfig, mesh: Mesh, *,
+                fsdp: bool = True):
+    """Tree of PartitionSpecs matching an (abstract) param tree."""
+    def one(path, leaf):
+        return param_spec(_path_str(path), leaf.ndim, cfg, mesh, fsdp=fsdp)
+    return jax.tree_util.tree_map_with_path(one, abstract_params)
+
+
+def param_shardings(abstract_params, cfg, mesh, *, fsdp: bool = True):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s),
+                        param_specs(abstract_params, cfg, mesh, fsdp=fsdp))
+
+
+# ---------------------------------------------------------------------------
+# batch / cache specs
+# ---------------------------------------------------------------------------
+
+
+def batch_spec(mesh: Mesh, batch_size: int) -> P:
+    """Leading-axis spec for input batches."""
+    da = data_axes(mesh)
+    n_data = 1
+    for a in da:
+        n_data *= mesh.shape[a]
+    if batch_size % n_data == 0:
+        return P(da)
+    return P(None)
+
+
+def batch_specs(batch_tree, mesh: Mesh):
+    return jax.tree.map(
+        lambda leaf: P(*(tuple(batch_spec(mesh, leaf.shape[0])) +
+                         (None,) * (leaf.ndim - 1))), batch_tree)
+
+
+def cache_specs(abstract_cache, mesh: Mesh, batch_size: int):
+    """KV caches: batch over data axes when divisible; sequence slots over
+    "model" (plus the data axes too when batch is unshardable, e.g. the
+    524k-token batch-1 long-context cell)."""
+    da = data_axes(mesh)
+    n_data = 1
+    for a in da:
+        n_data *= mesh.shape[a]
+    batch_ok = batch_size % n_data == 0
+    b_ax = da if batch_ok else None
+    s_ax = "model" if batch_ok else tuple(list(da) + ["model"])
+
+    def one(path, leaf):
+        name = _path_str(path).rsplit("/", 1)[-1]
+        if name in ("k", "v"):      # [*, B, slots, Hkv, hd]
+            lead = (None,) * (leaf.ndim - 4)
+            return P(*lead, b_ax, s_ax, None, None)
+        if name == "pos":           # [*, B, slots]
+            lead = (None,) * (leaf.ndim - 2)
+            return P(*lead, b_ax, s_ax)
+        if name == "conv":          # [*, B, w-1, d_inner]
+            lead = (None,) * (leaf.ndim - 3)
+            return P(*lead, b_ax, None, "model")
+        if name == "ssm":           # [*, B, d_inner, d_state]
+            lead = (None,) * (leaf.ndim - 3)
+            return P(*lead, b_ax, "model", None)
+        return P()
+    return jax.tree_util.tree_map_with_path(one, abstract_cache)

@@ -1,0 +1,80 @@
+"""Bloom-filter construction Pallas kernel (phase 3 ``filter`` kernel).
+
+LUDA's ``filter`` CUDA kernels build one bloom block per SST.  A bit-scatter
+is pathological on TPU, so the adaptation builds the bitmap as an OR-reduction
+of one-hot word masks: for every (key, probe) we compare its word index
+against a word iota and OR in ``1 << bit`` -- compare/select/OR, all VPU.
+
+Grid: ``(group_tiles, key_chunks)``; the key-chunk axis accumulates into the
+output block across sequential grid steps (TPU grid order), bounding VMEM to
+``tile_groups * chunk_keys * n_words`` words.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+from repro.kernels import common, ref
+
+
+def _bloom_kernel(keys_ref, valid_ref, out_ref, *, n_probes, n_words):
+    @pl.when(pl.program_id(1) == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    keys = keys_ref[...]        # [TG, KC, L] uint32
+    valid = valid_ref[...] != 0  # [TG, KC]
+    h1, h2 = ref.bloom_hashes(keys)  # [TG, KC]
+    m_bits = jnp.uint32(n_words * 32)
+    word_iota = jax.lax.broadcasted_iota(jnp.uint32,
+                                         (1, 1, n_words), 2)
+    acc = jnp.zeros((keys.shape[0], n_words), jnp.uint32)
+    for i in range(n_probes):
+        pos = (h1 + jnp.uint32(i) * h2) % m_bits          # [TG, KC]
+        widx = (pos >> jnp.uint32(5))[..., None]          # [TG, KC, 1]
+        bit = (pos & jnp.uint32(31))[..., None]
+        hit = (word_iota == widx) & valid[..., None]
+        contrib = jnp.where(hit, jnp.uint32(1) << bit, jnp.uint32(0))
+        acc = acc | jax.lax.reduce(contrib, np.uint32(0),
+                                   jax.lax.bitwise_or, (1,))
+    out_ref[...] = out_ref[...] | acc
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "n_words", "n_probes", "group_tile", "key_chunk", "interpret"))
+def bloom_build(keys: jax.Array, valid: jax.Array, *, n_words: int,
+                n_probes: int, group_tile: int = 4, key_chunk: int = 256,
+                interpret: bool | None = None) -> jax.Array:
+    """Build bloom filters on device.
+
+    ``keys``: uint32 ``[groups, keys_per_group, lanes]``;
+    ``valid``: uint32/bool ``[groups, keys_per_group]`` (0 = padded slot).
+    Returns uint32 ``[groups, n_words]``.
+    """
+    if interpret is None:
+        interpret = common.default_interpret()
+    g, k, lanes = keys.shape
+    tg = min(group_tile, g)
+    kc = min(key_chunk, k)
+    gp, kp = common.round_up(g, tg), common.round_up(k, kc)
+    if (gp, kp) != (g, k):
+        keys = jnp.pad(keys, ((0, gp - g), (0, kp - k), (0, 0)))
+        valid = jnp.pad(valid.astype(jnp.uint32),
+                        ((0, gp - g), (0, kp - k)))
+    out = pl.pallas_call(
+        functools.partial(_bloom_kernel, n_probes=n_probes, n_words=n_words),
+        grid=(gp // tg, kp // kc),
+        in_specs=[
+            pl.BlockSpec((tg, kc, lanes), lambda i, j: (i, j, 0)),
+            pl.BlockSpec((tg, kc), lambda i, j: (i, j)),
+        ],
+        out_specs=pl.BlockSpec((tg, n_words), lambda i, j: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((gp, n_words), jnp.uint32),
+        interpret=interpret,
+    )(keys.astype(jnp.uint32), valid.astype(jnp.uint32))
+    return out[:g]

@@ -1,0 +1,27 @@
+"""Shared helpers for Pallas kernels."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def lex_less(a: jax.Array, b: jax.Array, num_keys: int) -> jax.Array:
+    """Lexicographic ``a < b`` over the first ``num_keys`` lanes of the last
+    axis.  Inputs ``[..., L]`` uint32; output bool ``[...]``."""
+    res = jnp.zeros(a.shape[:-1], bool)
+    eq = jnp.ones(a.shape[:-1], bool)
+    for lane in range(num_keys):
+        res = res | (eq & (a[..., lane] < b[..., lane]))
+        eq = eq & (a[..., lane] == b[..., lane])
+    return res
+
+
+def default_interpret() -> bool:
+    """Pallas ``interpret=`` default: interpret on CPU (this container),
+    compiled on real TPU."""
+    return jax.default_backend() == "cpu"
+
+
+def round_up(x: int, m: int) -> int:
+    return (x + m - 1) // m * m

@@ -1,0 +1,98 @@
+"""Public jitted API over the Pallas kernels.
+
+Every entry point accepts ``backend=``:
+
+* ``"pallas"``   -- the TPU kernel (interpret-mode on CPU),
+* ``"ref"``      -- the pure-jnp oracle in ``ref.py``,
+* ``"auto"``     -- pallas on TPU, ref on CPU (fast and identical; the
+  interpret-mode kernels are exercised by the test suite, not the hot path
+  of CPU-hosted benchmarks).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import bitonic_sort as _bitonic
+from repro.kernels import bloom as _bloom
+from repro.kernels import crc32 as _crc32
+from repro.kernels import prefix as _prefix
+from repro.kernels import ref
+
+_ON_TPU = None
+
+
+def _use_pallas(backend: str) -> bool:
+    global _ON_TPU
+    if _ON_TPU is None:
+        _ON_TPU = jax.default_backend() == "tpu"
+    if backend == "pallas":
+        return True
+    if backend == "ref":
+        return False
+    return _ON_TPU  # auto
+
+
+def crc32_blocks(words: jax.Array, *, backend: str = "auto") -> jax.Array:
+    """uint32 [n_blocks] CRC-32 per row; exact ``binascii.crc32`` match."""
+    if _use_pallas(backend):
+        return _crc32.crc32_blocks(words)
+    return ref.crc32_words(words)
+
+
+def crc32_sections(sections, *, backend: str = "auto") -> jax.Array:
+    """CRC-32 of the logical concat of per-block sections (affine
+    combination; no concatenated copy)."""
+    if _use_pallas(backend):
+        return _crc32.crc32_blocks_sections(tuple(sections))
+    return ref.crc32_words_sections(sections)
+
+
+def bloom_build(keys: jax.Array, valid: jax.Array | None = None, *,
+                n_words: int, n_probes: int,
+                backend: str = "auto") -> jax.Array:
+    if valid is None:
+        valid = jnp.ones(keys.shape[:-1], jnp.uint32)
+    if _use_pallas(backend):
+        return _bloom.bloom_build(keys, valid, n_words=n_words,
+                                  n_probes=n_probes)
+    return ref.bloom_build(keys, n_words=n_words, n_probes=n_probes,
+                           valid=valid != 0)
+
+
+def bloom_query(filters: jax.Array, keys: jax.Array, *,
+                n_probes: int) -> jax.Array:
+    return ref.bloom_query(filters, keys, n_probes=n_probes)
+
+
+def prefix_encode(keys: jax.Array, *, restart_interval: int = 16,
+                  backend: str = "auto") -> jax.Array:
+    if _use_pallas(backend):
+        return _prefix.prefix_encode(keys, restart_interval=restart_interval)
+    return ref.prefix_encode(keys, restart_interval=restart_interval)
+
+
+def prefix_decode(shared: jax.Array, keys_raw: jax.Array, *,
+                  restart_interval: int = 16) -> jax.Array:
+    return ref.prefix_decode(shared, keys_raw,
+                             restart_interval=restart_interval)
+
+
+def sort_tuples(rows: jax.Array, num_keys: int | None = None, *,
+                backend: str = "auto",
+                device_sort_max: int = 1 << 17) -> jax.Array:
+    """Sort ``[n, L]`` uint32 rows lexicographically.
+
+    ``num_keys=None`` sorts over all lanes (callers append an index lane for
+    stable semantics).  The Pallas bitonic path handles up to
+    ``device_sort_max`` rows in a single VMEM block; above that the XLA
+    multi-operand sort is used (still fully on device -- no cooperative
+    round trip).
+    """
+    if num_keys is None:
+        num_keys = rows.shape[1]
+    if _use_pallas(backend) and rows.shape[0] <= device_sort_max \
+            and num_keys == rows.shape[1]:
+        return _bitonic.bitonic_sort(rows)
+    return ref.sort_tuples(rows, num_keys)

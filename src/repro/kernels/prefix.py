@@ -1,0 +1,58 @@
+"""Shared-key (prefix-compression) encode Pallas kernel (phase 3
+``shared_key`` kernel).
+
+Computes, for each sorted key, the byte length of the prefix it shares with
+its predecessor, reset at LevelDB restart points.  Fully parallel: byte
+equality + cumulative-product prefix AND + row sum.
+
+Tiles are an exact multiple of the restart interval, so the first row of a
+tile is always a restart point and the ``roll`` wrap never leaks across
+tiles.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels import common, ref
+
+
+def _prefix_kernel(keys_ref, out_ref, *, restart_interval):
+    keys = keys_ref[...]                       # [TR, L] uint32
+    kb = ref.u32_to_bytes(keys)                # [TR, B]
+    prev = jnp.roll(kb, 1, axis=0)
+    eq = (kb == prev).astype(jnp.int32)
+    shared = jnp.cumprod(eq, axis=-1).sum(-1)  # [TR]
+    local = jax.lax.broadcasted_iota(jnp.int32, (keys.shape[0],), 0)
+    out = jnp.where(local % restart_interval == 0, 0, shared)
+    out_ref[...] = out[:, None]
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "restart_interval", "row_tile", "interpret"))
+def prefix_encode(keys: jax.Array, *, restart_interval: int = 16,
+                  row_tile: int = 256,
+                  interpret: bool | None = None) -> jax.Array:
+    """Shared-prefix lengths. ``keys``: uint32 ``[n, lanes]`` (sorted);
+    returns int32 ``[n]``.  ``n`` must be a multiple of restart_interval."""
+    if interpret is None:
+        interpret = common.default_interpret()
+    n, lanes = keys.shape
+    assert n % restart_interval == 0, "rows must fill restart intervals"
+    tr = min(common.round_up(row_tile, restart_interval), n)
+    padded = common.round_up(n, tr)
+    if padded != n:
+        keys = jnp.pad(keys, ((0, padded - n), (0, 0)))
+    out = pl.pallas_call(
+        functools.partial(_prefix_kernel, restart_interval=restart_interval),
+        grid=(padded // tr,),
+        in_specs=[pl.BlockSpec((tr, lanes), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((tr, 1), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((padded, 1), jnp.int32),
+        interpret=interpret,
+    )(keys.astype(jnp.uint32))
+    return out[:n, 0]

@@ -1,0 +1,66 @@
+"""Training launcher: supervised, checkpointed, restartable.
+
+    PYTHONPATH=src python -m repro.launch.train --arch qwen3-14b \
+        --smoke --steps 200 --ckpt /tmp/ckpt [--fail-at 120]
+
+``--smoke`` runs the reduced config of the arch (CPU-feasible); without it
+the full assigned config is used (real accelerators required).  The
+supervisor restarts from the newest checkpoint on failure; pass a
+different ``--mesh-shape`` on resume for elastic re-meshing.
+"""
+
+from __future__ import annotations
+
+import argparse
+import tempfile
+
+import jax
+
+from repro.configs import get_config, get_smoke_config
+from repro.distributed.fault_tolerance import Supervisor, SupervisorConfig
+from repro.training.optimizer import AdamWConfig
+from repro.training.train_loop import Trainer, TrainLoopConfig
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--ckpt", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=25)
+    ap.add_argument("--lr", type=float, default=1e-3)
+    ap.add_argument("--fail-at", type=int, default=None)
+    ap.add_argument("--mesh-shape", type=int, nargs=2, default=None,
+                    metavar=("DATA", "MODEL"))
+    ap.add_argument("--max-restarts", type=int, default=3)
+    args = ap.parse_args()
+
+    cfg = get_smoke_config(args.arch) if args.smoke \
+        else get_config(args.arch)
+    ckpt = args.ckpt or tempfile.mkdtemp(prefix=f"ckpt-{args.arch}-")
+    if args.mesh_shape:
+        mesh = jax.make_mesh(tuple(args.mesh_shape), ("data", "model"))
+    else:
+        from repro.launch.mesh import make_host_mesh
+        mesh = make_host_mesh()
+    loop = TrainLoopConfig(
+        steps=args.steps, batch=args.batch, seq=args.seq,
+        ckpt_every=args.ckpt_every,
+        opt=AdamWConfig(lr=args.lr, total_steps=args.steps))
+
+    def make_trainer(attempt):
+        return Trainer(cfg, loop, mesh, ckpt,
+                       fail_at_step=args.fail_at if attempt == 0 else None)
+
+    result = Supervisor(make_trainer,
+                        SupervisorConfig(max_restarts=args.max_restarts)
+                        ).run()
+    print(f"finished: step={result.final_step} restarts={result.restarts} "
+          f"final-loss={result.losses[-1][1]:.4f} ckpt={ckpt}")
+
+
+if __name__ == "__main__":
+    main()

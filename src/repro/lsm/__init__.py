@@ -1,0 +1,15 @@
+"""LSM key-value store substrate (LevelDB-equivalent, built in this repo).
+
+The store is the host-side system the LUDA device compaction engine plugs
+into: memtable + WAL + leveled SST files + versioned manifest, with
+pluggable compaction engines (``device`` = the paper's offload,
+``cpu`` = the LevelDB-like baseline; ``threads`` models the RocksDB-like
+multithreaded baseline).
+"""
+
+
+def __getattr__(name):  # lazy: avoids core.scheduler <-> lsm.db cycle
+    if name in ("LsmDB", "DBConfig", "DBStats"):
+        from repro.lsm import db
+        return getattr(db, name)
+    raise AttributeError(name)

@@ -1,0 +1,341 @@
+"""CPU compaction baselines (the LevelDB / RocksDB side of the paper).
+
+Pure numpy + binascii -- no JAX.  The math mirrors the device kernels
+exactly (same CRC, same bloom hash, same prefix rules), so for identical
+inputs the CPU and device engines emit **bit-identical** SST files; the
+test suite asserts this, which cross-validates both engines.
+
+``threads`` models RocksDB's multi-threaded compaction: the work here is
+single-threaded (1-core container) and the benchmark harness divides the
+measured CPU seconds by the effective parallelism of the simulated server
+(see benchmarks/contention.py).
+"""
+
+from __future__ import annotations
+
+import binascii
+import dataclasses
+import time
+
+import numpy as np
+
+from repro.core.formats import SSTGeometry, SSTImage
+
+U32 = np.uint32
+
+
+# ---------------------------------------------------------------------------
+# numpy mirrors of the kernel math
+# ---------------------------------------------------------------------------
+
+
+def np_u32_to_bytes(words: np.ndarray) -> np.ndarray:
+    shifts = (8 * (3 - np.arange(4, dtype=np.uint32))).astype(np.uint32)
+    b = (words[..., None] >> shifts) & U32(0xFF)
+    return b.reshape(*words.shape[:-1], words.shape[-1] * 4).astype(np.uint8)
+
+
+def np_bytes_to_u32(b: np.ndarray) -> np.ndarray:
+    L = b.shape[-1] // 4
+    b4 = b.reshape(*b.shape[:-1], L, 4).astype(np.uint32)
+    shifts = (8 * (3 - np.arange(4, dtype=np.uint32))).astype(np.uint32)
+    return (b4 << shifts).sum(-1).astype(np.uint32)
+
+
+def np_prefix_encode(keys: np.ndarray, restart_interval: int) -> np.ndarray:
+    kb = np_u32_to_bytes(keys)
+    prev = np.roll(kb, 1, axis=0)
+    eq = (kb == prev).astype(np.int32)
+    shared = np.cumprod(eq, axis=-1).sum(-1)
+    idx = np.arange(keys.shape[0])
+    return np.where(idx % restart_interval == 0, 0, shared).astype(np.int32)
+
+
+def np_prefix_decode(shared: np.ndarray, keys_raw: np.ndarray,
+                     restart_interval: int) -> np.ndarray:
+    """Vectorized across restart intervals: the serial chain is only
+    ``restart_interval`` steps deep (LevelDB's same parallelism window)."""
+    kb = np_u32_to_bytes(keys_raw).copy()
+    n, B = kb.shape
+    r = restart_interval
+    pad = (-n) % r
+    if pad:
+        kb = np.concatenate([kb, np.zeros((pad, B), kb.dtype)])
+        shared = np.concatenate([shared, np.zeros(pad, shared.dtype)])
+    ki = kb.reshape(-1, r, B)
+    sh = shared.reshape(-1, r)
+    pos = np.arange(B)[None, :]
+    for t in range(1, r):
+        m = pos < sh[:, t, None]
+        ki[:, t] = np.where(m, ki[:, t - 1], ki[:, t])
+    out = ki.reshape(-1, B)[:n]
+    return np_bytes_to_u32(out)
+
+
+def np_crc_blocks(words: np.ndarray) -> np.ndarray:
+    """binascii per block over the little-endian word serialization (this is
+    how LevelDB computes block trailers: one C CRC pass per block)."""
+    return np.array([binascii.crc32(row.astype("<u4").tobytes()) & 0xFFFFFFFF
+                     for row in words], dtype=np.uint32)
+
+
+def _np_mix32(h):
+    h = h ^ (h >> U32(16))
+    h = (h * U32(0x85EBCA6B)).astype(U32)
+    h = h ^ (h >> U32(13))
+    h = (h * U32(0xC2B2AE35)).astype(U32)
+    return h ^ (h >> U32(16))
+
+
+def np_bloom_hashes(keys: np.ndarray):
+    keys = keys.astype(U32)
+    h1 = np.full(keys.shape[:-1], 2166136261, U32)
+    h2 = np.full(keys.shape[:-1], 2166136261 ^ 0xDEADBEEF, U32)
+    for lane in range(keys.shape[-1]):
+        h1 = ((h1 ^ keys[..., lane]) * U32(16777619)).astype(U32)
+        h2 = ((h2 ^ U32(0x9E3779B9) ^ keys[..., lane]) *
+              U32(16777619)).astype(U32)
+    return _np_mix32(h1), _np_mix32(h2) | U32(1)
+
+
+def np_bloom_build(keys: np.ndarray, valid: np.ndarray, n_words: int,
+                   n_probes: int) -> np.ndarray:
+    g, k, _ = keys.shape
+    h1, h2 = np_bloom_hashes(keys)
+    out = np.zeros((g, n_words), U32)
+    m_bits = U32(n_words * 32)
+    for i in range(n_probes):
+        pos = ((h1 + U32(i) * h2) % m_bits)
+        w = (pos >> 5).astype(np.int64)
+        bit = (U32(1) << (pos & U32(31))).astype(U32)
+        for gi in range(g):
+            np.bitwise_or.at(out[gi], w[gi][valid[gi]], bit[gi][valid[gi]])
+    return out
+
+
+def np_bloom_query(filters: np.ndarray, keys: np.ndarray,
+                   n_probes: int) -> np.ndarray:
+    h1, h2 = np_bloom_hashes(keys)
+    n_words = filters.shape[-1]
+    m_bits = U32(n_words * 32)
+    ok = np.ones(h1.shape, bool)
+    for i in range(n_probes):
+        pos = (h1 + U32(i) * h2) % m_bits
+        word = np.take_along_axis(filters, (pos >> 5).astype(np.int64),
+                                  axis=-1)
+        ok &= ((word >> (pos & U32(31))) & 1).astype(bool)
+    return ok
+
+
+def np_wire_words(img: SSTImage) -> np.ndarray:
+    b, k, lanes = img.keys.shape
+    vw = img.vals.shape[-1]
+    return np.concatenate([
+        np.asarray(img.nvalid, U32)[:, None],
+        np.asarray(img.keys, U32).reshape(b, k * lanes),
+        np.asarray(img.meta, U32),
+        np.asarray(img.vals, U32).reshape(b, k * vw),
+        np.asarray(img.shared).astype(U32),
+    ], axis=-1)
+
+
+# ---------------------------------------------------------------------------
+# The engine
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class EngineStats:
+    n_input: int = 0
+    n_live: int = 0
+    n_dropped: int = 0
+    crc_ok: bool = True
+    bytes_in: int = 0
+    bytes_out: int = 0
+    host_seconds: float = 0.0
+    device_seconds: float = 0.0
+
+
+class CpuCompactionEngine:
+    """LevelDB-like compaction entirely on the host CPU."""
+
+    name = "cpu"
+
+    def __init__(self, geom: SSTGeometry, threads: int = 1):
+        self.geom = geom
+        self.threads = threads
+
+    # -- phase 1 -----------------------------------------------------------
+    def _unpack(self, img: SSTImage):
+        g = self.geom
+        b, k, lanes = img.keys.shape
+        crc_ok = bool((np_crc_blocks(np_wire_words(img)) ==
+                       np.asarray(img.crc, U32)).all())
+        keys = np_prefix_decode(
+            np.asarray(img.shared).reshape(b * k),
+            np.asarray(img.keys, U32).reshape(b * k, lanes),
+            g.restart_interval)
+        valid = (np.arange(k)[None, :] <
+                 np.asarray(img.nvalid)[:, None]).reshape(b * k)
+        return keys, np.asarray(img.meta, U32).reshape(b * k), \
+            np.asarray(img.vals, U32).reshape(b * k, -1), valid, crc_ok
+
+    # -- public API (mirrors CompactionExecutor) ----------------------------
+    def compact(self, images: list[SSTImage], *, bottom_level: bool = False
+                ) -> tuple[SSTImage, EngineStats]:
+        t0 = time.perf_counter()
+        g = self.geom
+        parts = [self._unpack(SSTImage(*(np.asarray(a) for a in im)))
+                 for im in images]
+        keys = np.concatenate([p[0] for p in parts])
+        meta = np.concatenate([p[1] for p in parts])
+        vals = np.concatenate([p[2] for p in parts])
+        valid = np.concatenate([p[3] for p in parts])
+        crc_ok = all(p[4] for p in parts)
+
+        # phase 2: merge-sort + dedup (key asc, seq desc)
+        sk = np.where(valid[:, None], keys, U32(0xFFFFFFFF))
+        inv_meta = (~meta).astype(U32)
+        order = np.lexsort(tuple(
+            [np.arange(len(sk), dtype=U32)] + [inv_meta] +
+            [sk[:, lane] for lane in reversed(range(sk.shape[1]))]))
+        keys_s, meta_s, valid_s = keys[order], meta[order], valid[order]
+        vals_s = vals[order]
+        neq = np.any(keys_s != np.roll(keys_s, 1, axis=0), axis=1)
+        neq[0] = True
+        live = valid_s & neq
+        if bottom_level:
+            live &= (meta_s & 1).astype(bool)
+
+        out = self.build_image(keys_s[live], meta_s[live], vals_s[live],
+                               n_blocks=sum(im.keys.shape[0]
+                                            for im in images))
+        wire = g.wire_words_per_block * 4
+        stats = EngineStats(
+            n_input=int(valid.sum()), n_live=int(live.sum()),
+            n_dropped=int(valid.sum() - live.sum()), crc_ok=crc_ok,
+            bytes_in=sum(im.keys.shape[0] for im in images) * wire,
+            bytes_out=int((np.asarray(out.nvalid) > 0).sum()) * wire,
+            host_seconds=0.0)
+        stats.host_seconds = time.perf_counter() - t0
+        return out, stats
+
+    def build_image(self, keys, meta, vals, n_blocks: int | None = None
+                    ) -> SSTImage:
+        """Pack sorted entries into a wire image (numpy phase 3)."""
+        g = self.geom
+        keys = np.asarray(keys, U32)
+        meta = np.asarray(meta, U32)
+        vals = np.asarray(vals, U32)
+        n = keys.shape[0]
+        k = g.block_kvs
+        nb = max(1, -(-n // k)) if n_blocks is None else max(1, n_blocks)
+        n_pad = nb * k
+        keys = np.pad(keys, ((0, n_pad - n), (0, 0)))
+        meta = np.pad(meta, (0, n_pad - n))
+        vals = np.pad(vals, ((0, n_pad - n), (0, 0)))
+        valid = np.arange(n_pad) < n
+
+        shared = np_prefix_encode(keys, g.restart_interval)
+        shared = np.where(valid, shared, 0).astype(np.int32)
+        kb = np_u32_to_bytes(keys)
+        bpos = np.arange(kb.shape[-1])
+        kb_wire = np.where(bpos[None, :] < shared[:, None], 0, kb)
+        kb_wire = np.where(valid[:, None], kb_wire, 0).astype(np.uint8)
+        keys_wire = np_bytes_to_u32(kb_wire)
+        meta_w = np.where(valid, meta, 0).astype(U32)
+        nvalid = np.clip(n - np.arange(nb) * k, 0, k).astype(np.int32)
+
+        img = SSTImage(
+            keys=keys_wire.reshape(nb, k, g.key_lanes),
+            meta=meta_w.reshape(nb, k),
+            vals=vals.reshape(nb, k, g.value_words),
+            shared=shared.reshape(nb, k), nvalid=nvalid,
+            crc=np.zeros(nb, U32), bloom=np.zeros((1, 1), U32))
+        crc = np_crc_blocks(np_wire_words(img))
+        if g.bloom_granularity == "block":
+            groups, per = nb, k
+        else:
+            per = min(g.sst_kvs, n_pad)
+            groups = n_pad // per
+        bloom = np_bloom_build(keys.reshape(groups, per, g.key_lanes),
+                               valid.reshape(groups, per),
+                               g.bloom_words(per), g.bloom_probes)
+        return SSTImage(keys=img.keys, meta=img.meta, vals=img.vals,
+                        shared=img.shared, nvalid=img.nvalid, crc=crc,
+                        bloom=bloom)
+
+
+class DeviceCompactionEngine:
+    """The LUDA path: wraps the jitted device pipeline behind the same
+    interface as the CPU engine."""
+
+    name = "device"
+
+    def __init__(self, geom: SSTGeometry, sort_mode: str = "device",
+                 backend: str = "auto"):
+        from repro.core.offload import CompactionExecutor
+        self.geom = geom
+        self.executor = CompactionExecutor(geom, sort_mode=sort_mode,
+                                           backend=backend)
+
+    def compact(self, images, *, bottom_level: bool = False):
+        import jax.numpy as jnp
+
+        from repro.core import formats as fmts
+        from repro.core import offload
+        t0 = time.perf_counter()
+        imgs = [SSTImage(*(jnp.asarray(np.asarray(a)) for a in im))
+                for im in images]
+        # bucket the block count to a power of two: stable jit shapes across
+        # jobs (padding blocks are empty and carry the zero-block CRC)
+        img = fmts.concat_images(imgs)
+        bucket = offload.next_pow2(img.keys.shape[0])
+        img = offload.pad_image_blocks(img, bucket, self.geom)
+        # the jitted pipeline call stands in for the TPU execution: its
+        # wall time is NOT host coordination work (the roofline model
+        # supplies the accelerator time) -- time it separately
+        t_exec0 = time.perf_counter()
+        out, s = self.executor.compact([img], bottom_level=bottom_level)
+        out = SSTImage(*(np.asarray(a) for a in out))
+        exec_wall = time.perf_counter() - t_exec0
+        wire = self.geom.wire_words_per_block * 4
+        real_blocks = sum(np.asarray(im.keys).shape[0] for im in images)
+        stats = EngineStats(
+            n_input=int(s.n_input), n_live=int(s.n_live),
+            n_dropped=int(s.n_dropped), crc_ok=bool(s.crc_ok),
+            bytes_in=real_blocks * wire, bytes_out=int(s.bytes_out))
+        stats.host_seconds = max(time.perf_counter() - t0 - exec_wall, 0.0)
+        stats.device_seconds = model_device_seconds(
+            stats.bytes_in, stats.bytes_out, self.geom)
+        return out, stats
+
+    def build_image(self, keys, meta, vals, n_blocks=None) -> SSTImage:
+        import jax.numpy as jnp
+
+        from repro.core import offload
+        keys = np.asarray(keys, U32)
+        meta = np.asarray(meta, U32)
+        vals = np.asarray(vals, U32)
+        n = keys.shape[0]
+        k = self.geom.block_kvs
+        n_pad = offload.next_pow2(max(1, -(-n // k))) * k
+        keys = np.pad(keys, ((0, n_pad - n), (0, 0)))
+        meta = np.pad(meta, (0, n_pad - n))
+        vals = np.pad(vals, ((0, n_pad - n), (0, 0)))
+        img = offload.build_image(
+            jnp.asarray(keys), jnp.asarray(meta), jnp.asarray(vals),
+            jnp.int32(n), geom=self.geom, backend=self.executor.backend)
+        return SSTImage(*(np.asarray(a) for a in img))
+
+
+def model_device_seconds(bytes_in: int, bytes_out: int,
+                         geom: SSTGeometry) -> float:
+    """Roofline model of the TPU-side compaction time (this container has no
+    TPU; constants from the spec: 819 GB/s HBM, 197 TFLOP/s bf16).  The
+    pipeline is memory-bound: ~3 HBM passes (unpack read, sort traffic,
+    pack write) + PCIe-class host link at 50 GB/s for H2D/D2H."""
+    hbm = 819e9
+    link = 50e9
+    moved = 3 * (bytes_in + bytes_out)
+    return moved / hbm + (bytes_in + bytes_out) / link + 20e-6

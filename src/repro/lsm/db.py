@@ -1,0 +1,311 @@
+"""The LSM key-value store: public API over memtable + WAL + levels +
+pluggable compaction engine (device = LUDA, cpu = LevelDB-like baseline)."""
+
+from __future__ import annotations
+
+import dataclasses
+import os
+import time
+
+import numpy as np
+
+from repro.core import formats
+from repro.core.formats import SSTGeometry, SSTImage
+from repro.core.scheduler import (CompactionJob, CompactionScheduler,
+                                  SchedulerConfig)
+from repro.lsm import cpu_engine as ce
+from repro.lsm import memtable, sstable, wal
+from repro.lsm.sstable import FileMeta, TableCache
+from repro.lsm.version import VersionEdit, VersionSet
+
+
+@dataclasses.dataclass
+class DBConfig:
+    geom: SSTGeometry = dataclasses.field(default_factory=SSTGeometry)
+    engine: str = "device"          # "device" | "cpu"
+    sort_mode: str = "device"       # device engine phase-2 mode
+    threads: int = 1                # modeled CPU compaction threads
+    memtable_bytes: int | None = None
+    scheduler: SchedulerConfig = dataclasses.field(
+        default_factory=SchedulerConfig)
+    table_cache: int = 64
+    sync_wal: bool = False
+    auto_compact: bool = True
+
+
+@dataclasses.dataclass
+class DBStats:
+    puts: int = 0
+    gets: int = 0
+    deletes: int = 0
+    flushes: int = 0
+    compactions: int = 0
+    trivial_moves: int = 0
+    compact_bytes_in: int = 0
+    compact_bytes_out: int = 0
+    compact_entries_in: int = 0
+    compact_entries_dropped: int = 0
+    compact_host_seconds: float = 0.0
+    compact_device_seconds: float = 0.0
+    flush_host_seconds: float = 0.0
+    bloom_negative_skips: int = 0
+
+
+class LsmDB:
+    def __init__(self, path: str, cfg: DBConfig | None = None):
+        self.path = path
+        self.cfg = cfg or DBConfig()
+        os.makedirs(path, exist_ok=True)
+        self.geom = self.cfg.geom
+        self.versions = VersionSet(path)
+        self.versions.open()
+        self.scheduler = CompactionScheduler(self.cfg.scheduler)
+        self.scheduler.compact_pointer = dict(self.versions.compact_pointer)
+        self.cache = TableCache(self.cfg.table_cache)
+        self.mem = memtable.MemTable()
+        self.stats = DBStats()
+        self.engine = self._make_engine()
+        self._memtable_limit = self.cfg.memtable_bytes or self.geom.sst_bytes
+        self._wal_path = os.path.join(path, "wal.log")
+        self._replay_wal()
+        self._wal = wal.WALWriter(self._wal_path, sync=self.cfg.sync_wal)
+
+    def _make_engine(self):
+        if self.cfg.engine == "device":
+            return ce.DeviceCompactionEngine(self.geom,
+                                             sort_mode=self.cfg.sort_mode)
+        if self.cfg.engine == "cpu":
+            return ce.CpuCompactionEngine(self.geom, threads=self.cfg.threads)
+        raise ValueError(f"unknown engine {self.cfg.engine!r}")
+
+    def _replay_wal(self):
+        for kind, seq, key, value in wal.replay(self._wal_path):
+            if kind == wal.PUT:
+                self.mem.put(key, seq, value)
+            else:
+                self.mem.delete(key, seq)
+            self.versions.last_seq = max(self.versions.last_seq, seq)
+
+    # ------------------------------------------------------------------
+    # writes
+    # ------------------------------------------------------------------
+
+    def put(self, key: bytes, value: bytes):
+        assert len(key) <= self.geom.key_bytes
+        if key.endswith(b"\x00") or not key:
+            raise ValueError("keys must be non-empty and not end with NUL "
+                             "(fixed-width key format)")
+        assert len(value) <= self.geom.value_bytes - 4
+        seq = self._next_seq()
+        self._wal.append(wal.PUT, seq, key, value)
+        self.mem.put(key, seq, value)
+        self.stats.puts += 1
+        self._maybe_flush()
+
+    def delete(self, key: bytes):
+        seq = self._next_seq()
+        self._wal.append(wal.DELETE, seq, key)
+        self.mem.delete(key, seq)
+        self.stats.deletes += 1
+        self._maybe_flush()
+
+    def _next_seq(self) -> int:
+        self.versions.last_seq += 1
+        return self.versions.last_seq
+
+    def _maybe_flush(self):
+        if self.mem.approx_bytes >= self._memtable_limit:
+            self.flush()
+            if self.cfg.auto_compact:
+                self.maybe_compact()
+
+    # ------------------------------------------------------------------
+    # reads
+    # ------------------------------------------------------------------
+
+    def get(self, key: bytes):
+        """value bytes, or None if absent / deleted."""
+        self.stats.gets += 1
+        found, value = self.mem.get(key)
+        if found:
+            return value
+        # L0: overlapping files, newest first
+        for fm in sorted(self.versions.current.levels[0],
+                         key=lambda f: -f.file_no):
+            if fm.smallest <= key <= fm.largest:
+                found, value = self._table_get(fm, key)
+                if found:
+                    return value
+        # deeper levels: disjoint ranges
+        for level in range(1, len(self.versions.current.levels)):
+            for fm in self.versions.current.levels[level]:
+                if fm.smallest <= key <= fm.largest:
+                    found, value = self._table_get(fm, key)
+                    if found:
+                        return value
+                    break
+        return None
+
+    def _table_get(self, fm: FileMeta, key: bytes):
+        tbl = self.cache.get(fm, self.geom)
+        # bloom probe on the candidate block group
+        import bisect
+        i = bisect.bisect_left(tbl.keys_bytes, key)
+        if i == len(tbl.keys_bytes) or tbl.keys_bytes[i] != key:
+            if tbl.bloom.shape[0] > 0:
+                group = min(i // self.geom.block_kvs, tbl.bloom.shape[0] - 1)
+                probe = formats.pack_key_bytes(key, self.geom.key_bytes)
+                hit = ce.np_bloom_query(tbl.bloom[group:group + 1],
+                                        probe[None, None, :],
+                                        self.geom.bloom_probes)
+                if not bool(hit[0, 0]):
+                    self.stats.bloom_negative_skips += 1
+            return False, None
+        if not tbl.is_value[i]:
+            return True, None
+        return True, formats.unpack_value_bytes(tbl.vals[i])
+
+    def scan(self, start: bytes, end: bytes):
+        """[(key, value)] for start <= key < end, newest versions, no
+        tombstones."""
+        best: dict[bytes, tuple[int, bytes | None]] = {}
+        for k, seq, v in self.mem.sorted_entries():
+            if start <= k < end:
+                best[k] = (seq, v)
+        for _, fm in self.versions.current.all_files():
+            if fm.largest < start or fm.smallest >= end:
+                continue
+            tbl = self.cache.get(fm, self.geom)
+            import bisect
+            lo = bisect.bisect_left(tbl.keys_bytes, start)
+            hi = bisect.bisect_left(tbl.keys_bytes, end)
+            for i in range(lo, hi):
+                k = tbl.keys_bytes[i]
+                seq = int(tbl.seqs[i])
+                if k not in best or best[k][0] < seq:
+                    v = formats.unpack_value_bytes(tbl.vals[i]) \
+                        if tbl.is_value[i] else None
+                    best[k] = (seq, v)
+        return [(k, v) for k, (_, v) in sorted(best.items())
+                if v is not None]
+
+    # ------------------------------------------------------------------
+    # flush + compaction
+    # ------------------------------------------------------------------
+
+    def flush(self):
+        if len(self.mem) == 0:
+            return
+        t0 = time.perf_counter()
+        entries = self.mem.sorted_entries()
+        keys = np.stack([formats.pack_key_bytes(k, self.geom.key_bytes)
+                         for k, _, _ in entries])
+        meta = np.array([(s << 1) | (1 if v is not None else 0)
+                         for _, s, v in entries], np.uint32)
+        vals = np.stack([formats.pack_value_bytes(v or b"",
+                                                  self.geom.value_bytes)
+                         for _, _, v in entries])
+        img = self.engine.build_image(keys, meta, vals)
+        self._install_ssts(img, level=0)
+        self.mem = memtable.MemTable()
+        self._wal.close()
+        os.remove(self._wal_path)
+        self._wal = wal.WALWriter(self._wal_path, sync=self.cfg.sync_wal)
+        self.stats.flushes += 1
+        self.stats.flush_host_seconds += time.perf_counter() - t0
+
+    def _install_ssts(self, img: SSTImage, level: int,
+                      edit: VersionEdit | None = None) -> list[FileMeta]:
+        """Split a (possibly multi-SST) image into files and install."""
+        img = sstable.trim_image(img)
+        nvalid = np.asarray(img.nvalid)
+        live_blocks = max(1, int((nvalid > 0).sum()))
+        bps = self.geom.blocks_per_sst
+        own_edit = edit is None
+        edit = edit or VersionEdit()
+        metas = []
+        for start in range(0, live_blocks, bps):
+            stop = min(start + bps, live_blocks)
+            sub = SSTImage(
+                keys=img.keys[start:stop], meta=img.meta[start:stop],
+                vals=img.vals[start:stop], shared=img.shared[start:stop],
+                nvalid=img.nvalid[start:stop], crc=img.crc[start:stop],
+                bloom=img.bloom[start:stop]
+                if img.bloom.shape[0] == img.keys.shape[0] else img.bloom)
+            no = self.versions.new_file_no()
+            path = os.path.join(self.path, f"{no:06d}.sst")
+            fm = sstable.write_sst(path, sub, no)
+            edit.added.append((level, fm))
+            metas.append(fm)
+        edit.last_seq = self.versions.last_seq
+        edit.next_file_no = self.versions.next_file_no
+        if own_edit:
+            self.versions.log_and_apply(edit)
+        return metas
+
+    def maybe_compact(self):
+        if self.cfg.scheduler.paper_faithful:
+            # the paper's prototype artifact (§IV-C): compaction triggers
+            # only on a full L0 and pending memtable dumps are not folded
+            # into the running job -- at most one job per flush, so L0
+            # rebuilds and the next job's key overlap widens (more
+            # compaction data, as in Fig. 11)
+            self.compact_once()
+            return
+        guard = 0
+        while guard < 16:
+            job = self.scheduler.pick(self.versions.current)
+            if job is None:
+                return
+            self.compact_job(job)
+            guard += 1
+
+    def compact_once(self) -> bool:
+        job = self.scheduler.pick(self.versions.current)
+        if job is None:
+            return False
+        self.compact_job(job)
+        return True
+
+    def compact_job(self, job: CompactionJob):
+        # trivial move: single input, nothing overlapping below
+        if len(job.inputs_lo) == 1 and not job.inputs_hi and job.level > 0:
+            fm = job.inputs_lo[0]
+            edit = VersionEdit(added=[(job.level + 1, fm)],
+                               deleted=[(job.level, fm.file_no)])
+            self.versions.log_and_apply(edit)
+            self.stats.trivial_moves += 1
+            return
+        images = [sstable.read_sst(f.path) for f in job.all_inputs]
+        out, es = self.engine.compact(images, bottom_level=job.bottom_level)
+        edit = VersionEdit(
+            deleted=[(job.level, f.file_no) for f in job.inputs_lo] +
+                    [(job.level + 1, f.file_no) for f in job.inputs_hi])
+        self._install_ssts(out, level=job.level + 1, edit=edit)
+        self.versions.log_and_apply(edit)
+        for f in job.all_inputs:
+            self.cache.drop(f.file_no)
+            try:
+                os.remove(f.path)
+            except FileNotFoundError:
+                pass
+        s = self.stats
+        s.compactions += 1
+        s.compact_bytes_in += es.bytes_in
+        s.compact_bytes_out += es.bytes_out
+        s.compact_entries_in += es.n_input
+        s.compact_entries_dropped += es.n_dropped
+        s.compact_host_seconds += es.host_seconds
+        s.compact_device_seconds += es.device_seconds
+        if not es.crc_ok:
+            raise IOError("compaction input failed CRC verification")
+
+    # ------------------------------------------------------------------
+
+    def close(self):
+        self._wal.flush()
+        self._wal.close()
+        self.versions.close()
+
+    def level_sizes(self):
+        return [len(files) for files in self.versions.current.levels]

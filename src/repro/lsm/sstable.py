@@ -1,0 +1,233 @@
+"""SST file I/O + table cache.
+
+The on-disk format is the raw dump of the device wire image (DESIGN.md §2):
+
+  magic "LUDASST1"
+  u32 n_blocks, block_kvs, key_lanes, value_words, bloom_groups, bloom_words
+  keys   uint32 LE [n_blocks, block_kvs, key_lanes]
+  meta   uint32 LE [n_blocks, block_kvs]
+  vals   uint32 LE [n_blocks, block_kvs, value_words]
+  shared int32  LE [n_blocks, block_kvs]
+  nvalid int32  LE [n_blocks]
+  crc    uint32 LE [n_blocks]
+  bloom  uint32 LE [bloom_groups, bloom_words]
+  u32 file_crc  -- crc32 of everything before this field
+
+Trailing all-zero blocks (``nvalid == 0``) are trimmed on write: compaction
+outputs are sized for worst case, real files only pay for live blocks.
+"""
+
+from __future__ import annotations
+
+import binascii
+import dataclasses
+import os
+import struct
+from collections import OrderedDict
+
+import numpy as np
+
+from repro.core import formats
+from repro.core.formats import SSTGeometry, SSTImage
+
+MAGIC = b"LUDASST1"
+
+
+@dataclasses.dataclass
+class FileMeta:
+    file_no: int
+    path: str
+    smallest: bytes           # first live user key (trimmed)
+    largest: bytes            # last live user key (trimmed)
+    n_entries: int
+    size_bytes: int
+
+    def to_json(self):
+        return dict(file_no=self.file_no, path=self.path,
+                    smallest=self.smallest.hex(), largest=self.largest.hex(),
+                    n_entries=self.n_entries, size_bytes=self.size_bytes)
+
+    @classmethod
+    def from_json(cls, d):
+        return cls(file_no=d["file_no"], path=d["path"],
+                   smallest=bytes.fromhex(d["smallest"]),
+                   largest=bytes.fromhex(d["largest"]),
+                   n_entries=d["n_entries"], size_bytes=d["size_bytes"])
+
+
+def _np_image(img: SSTImage) -> SSTImage:
+    return SSTImage(*(np.asarray(a) for a in img))
+
+
+def trim_image(img: SSTImage) -> SSTImage:
+    """Drop trailing empty blocks (static-shape compaction padding)."""
+    nvalid = np.asarray(img.nvalid)
+    live = int((nvalid > 0).sum())
+    live = max(1, live)
+    img = _np_image(img)
+    if img.bloom.shape[0] == img.keys.shape[0]:  # block-granularity blooms
+        bloom = img.bloom[:live]
+    else:
+        bloom = img.bloom
+    return SSTImage(keys=img.keys[:live], meta=img.meta[:live],
+                    vals=img.vals[:live], shared=img.shared[:live],
+                    nvalid=img.nvalid[:live], crc=img.crc[:live],
+                    bloom=bloom)
+
+
+def write_sst(path: str, img: SSTImage, file_no: int) -> FileMeta:
+    img = trim_image(img)
+    b, k, lanes = img.keys.shape
+    vw = img.vals.shape[-1]
+    g, w = img.bloom.shape
+    header = MAGIC + struct.pack("<6I", b, k, lanes, vw, g, w)
+    payload = b"".join([
+        header,
+        img.keys.astype("<u4").tobytes(),
+        img.meta.astype("<u4").tobytes(),
+        img.vals.astype("<u4").tobytes(),
+        img.shared.astype("<i4").tobytes(),
+        img.nvalid.astype("<i4").tobytes(),
+        img.crc.astype("<u4").tobytes(),
+        img.bloom.astype("<u4").tobytes(),
+    ])
+    payload += struct.pack("<I", binascii.crc32(payload) & 0xFFFFFFFF)
+    tmp = path + ".tmp"
+    with open(tmp, "wb") as f:
+        f.write(payload)
+        f.flush()
+        os.fsync(f.fileno())
+    os.replace(tmp, path)  # atomic install
+
+    smallest, largest, n_entries = image_bounds(img)
+    return FileMeta(file_no=file_no, path=path,
+                    smallest=smallest, largest=largest,
+                    n_entries=n_entries, size_bytes=len(payload))
+
+
+def image_bounds(img: SSTImage, restart_interval: int = 16):
+    """(smallest_key, largest_key, n_entries) without a full decode.
+
+    Block starts are restart points (full keys), so ``smallest`` reads
+    directly; ``largest`` decodes only the final restart interval."""
+    from repro.lsm import cpu_engine as ce
+    nvalid = np.asarray(img.nvalid)
+    keys = np.asarray(img.keys, np.uint32)
+    n_entries = int(nvalid.sum())
+    if n_entries == 0:
+        return b"", b"", 0
+    smallest = formats.unpack_key_bytes(keys[0, 0]).rstrip(b"\x00")
+    b_last = int(np.nonzero(nvalid > 0)[0][-1])
+    nv = int(nvalid[b_last])
+    # the last restart interval: r is a restart point (shared[r] == 0), so
+    # decoding the slice alone reconstructs full keys
+    r = (nv - 1) // restart_interval * restart_interval
+    seg = ce.np_prefix_decode(np.asarray(img.shared)[b_last, r:nv],
+                              keys[b_last, r:nv], restart_interval)
+    largest = formats.unpack_key_bytes(seg[-1]).rstrip(b"\x00")
+    return smallest, largest, n_entries
+
+
+def read_sst(path: str) -> SSTImage:
+    with open(path, "rb") as f:
+        data = f.read()
+    (want,) = struct.unpack_from("<I", data, len(data) - 4)
+    if binascii.crc32(data[:-4]) & 0xFFFFFFFF != want:
+        raise IOError(f"file checksum mismatch: {path}")
+    assert data[:8] == MAGIC, f"bad magic in {path}"
+    b, k, lanes, vw, g, w = struct.unpack_from("<6I", data, 8)
+    off = 8 + 24
+
+    def take(shape, dt):
+        nonlocal off
+        n = int(np.prod(shape)) * 4
+        arr = np.frombuffer(data, dtype=dt, count=int(np.prod(shape)),
+                            offset=off).reshape(shape)
+        off += n
+        return arr
+
+    keys = take((b, k, lanes), "<u4")
+    meta = take((b, k), "<u4")
+    vals = take((b, k, vw), "<u4")
+    shared = take((b, k), "<i4")
+    nvalid = take((b,), "<i4")
+    crc = take((b,), "<u4")
+    bloom = take((g, w), "<u4")
+    return SSTImage(keys=keys, meta=meta, vals=vals, shared=shared,
+                    nvalid=nvalid, crc=crc, bloom=bloom)
+
+
+@dataclasses.dataclass
+class DecodedTable:
+    """Host-side decoded view for point lookups (table-cache entry)."""
+    keys_bytes: list          # trimmed user keys, sorted
+    seqs: np.ndarray
+    is_value: np.ndarray
+    vals: np.ndarray          # uint32 [n, vw]
+    bloom: np.ndarray
+    bloom_probes: int
+    key_bytes: int
+
+    def get(self, key: bytes):
+        """(found, value|None).  Newest version of key in this table."""
+        import bisect
+        i = bisect.bisect_left(self.keys_bytes, key)
+        if i == len(self.keys_bytes) or self.keys_bytes[i] != key:
+            return False, None
+        # entries sorted (key asc, seq desc) -> i is the newest
+        if not self.is_value[i]:
+            return True, None
+        return True, formats.unpack_value_bytes(self.vals[i])
+
+
+def decode_table(img: SSTImage, geom: SSTGeometry | None = None
+                 ) -> DecodedTable:
+    """Decode for point lookups (host read path -- numpy mirrors of the
+    device kernels; the device unpack stays on the compaction path where
+    the batch sizes justify offload)."""
+    from repro.lsm import cpu_engine as ce
+    if geom is None:
+        geom = SSTGeometry()  # restart_interval is the only field used
+    img_np = SSTImage(*(np.asarray(a) for a in img))
+    b, k, lanes = img_np.keys.shape
+    crc_ok = (ce.np_crc_blocks(ce.np_wire_words(img_np)) ==
+              np.asarray(img_np.crc, np.uint32)).all()
+    if not crc_ok:
+        raise IOError("SST block checksum mismatch")
+    keys = ce.np_prefix_decode(
+        np.asarray(img_np.shared).reshape(b * k),
+        np.asarray(img_np.keys, np.uint32).reshape(b * k, lanes),
+        geom.restart_interval)
+    valid = (np.arange(k)[None, :] <
+             np.asarray(img_np.nvalid)[:, None]).reshape(b * k)
+    meta = np.asarray(img_np.meta, np.uint32).reshape(b * k)[valid]
+    kb = [formats.unpack_key_bytes(r).rstrip(b"\x00") for r in keys[valid]]
+    return DecodedTable(
+        keys_bytes=kb, seqs=meta >> 1,
+        is_value=(meta & 1).astype(bool),
+        vals=np.asarray(img_np.vals, np.uint32).reshape(
+            b * k, -1)[valid],
+        bloom=np.asarray(img_np.bloom),
+        bloom_probes=SSTGeometry().bloom_probes,
+        key_bytes=lanes * 4)
+
+
+class TableCache:
+    """LRU cache of decoded tables."""
+
+    def __init__(self, capacity: int = 64):
+        self.capacity = capacity
+        self._c: OrderedDict[int, DecodedTable] = OrderedDict()
+
+    def get(self, meta: FileMeta, geom: SSTGeometry) -> DecodedTable:
+        if meta.file_no in self._c:
+            self._c.move_to_end(meta.file_no)
+            return self._c[meta.file_no]
+        tbl = decode_table(read_sst(meta.path), geom)
+        self._c[meta.file_no] = tbl
+        if len(self._c) > self.capacity:
+            self._c.popitem(last=False)
+        return tbl
+
+    def drop(self, file_no: int):
+        self._c.pop(file_no, None)

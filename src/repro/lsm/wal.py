@@ -1,0 +1,67 @@
+"""Write-ahead log: per-record CRC-32, replayable after crash.
+
+Record layout (little-endian):
+  u32 crc   -- crc32 of everything after this field
+  u8  kind  -- 1 put, 0 delete
+  u32 seq
+  u16 klen | key bytes
+  u32 vlen | value bytes (empty for delete)
+"""
+
+from __future__ import annotations
+
+import binascii
+import os
+import struct
+from typing import Iterator
+
+PUT, DELETE = 1, 0
+
+
+class WALWriter:
+    def __init__(self, path: str, sync: bool = False):
+        self.path = path
+        self._f = open(path, "ab")
+        self._sync = sync
+
+    def append(self, kind: int, seq: int, key: bytes, value: bytes = b""):
+        body = struct.pack("<BI", kind, seq)
+        body += struct.pack("<H", len(key)) + key
+        body += struct.pack("<I", len(value)) + value
+        rec = struct.pack("<I", binascii.crc32(body) & 0xFFFFFFFF) + body
+        self._f.write(struct.pack("<I", len(rec)) + rec)
+        if self._sync:
+            self._f.flush()
+            os.fsync(self._f.fileno())
+
+    def flush(self):
+        self._f.flush()
+
+    def close(self):
+        self._f.close()
+
+
+def replay(path: str) -> Iterator[tuple[int, int, bytes, bytes]]:
+    """Yield (kind, seq, key, value); stops cleanly at a torn/corrupt tail
+    (crash semantics: a partially-written last record is discarded)."""
+    if not os.path.exists(path):
+        return
+    with open(path, "rb") as f:
+        data = f.read()
+    off = 0
+    while off + 4 <= len(data):
+        (rec_len,) = struct.unpack_from("<I", data, off)
+        if off + 4 + rec_len > len(data):
+            return  # torn tail
+        rec = data[off + 4: off + 4 + rec_len]
+        off += 4 + rec_len
+        (crc,) = struct.unpack_from("<I", rec, 0)
+        body = rec[4:]
+        if binascii.crc32(body) & 0xFFFFFFFF != crc:
+            return  # corrupt tail
+        kind, seq = struct.unpack_from("<BI", body, 0)
+        (klen,) = struct.unpack_from("<H", body, 5)
+        key = body[7:7 + klen]
+        (vlen,) = struct.unpack_from("<I", body, 7 + klen)
+        value = body[11 + klen: 11 + klen + vlen]
+        yield kind, seq, key, value

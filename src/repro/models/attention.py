@@ -1,0 +1,231 @@
+"""Attention: GQA/MQA, RoPE, qk-norm, sliding windows, flash-style chunked
+softmax, KV caches with ring buffers for windowed layers.
+
+Masking is position-based everywhere: a KV slot carries its absolute
+position (or -1 when empty), and visibility is
+``0 <= kv_pos <= q_pos`` (+ ``kv_pos > q_pos - window`` for local layers).
+This makes full caches, ring buffers and prefill share one code path.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.annotate import constrain
+from repro.models import layers
+from repro.models.config import ModelConfig
+
+NEG = -1e30
+
+
+def attn_init(key, cfg: ModelConfig):
+    d, hd = cfg.d_model, cfg.resolved_head_dim
+    ks = layers.split_keys(key, 4)
+    p = {
+        "wq": layers.dense_init(ks[0], d, cfg.n_heads * hd),
+        "wk": layers.dense_init(ks[1], d, cfg.kv_heads * hd),
+        "wv": layers.dense_init(ks[2], d, cfg.kv_heads * hd),
+        "wo": layers.dense_init(ks[3], cfg.n_heads * hd, d),
+    }
+    if cfg.qk_norm:
+        p["q_norm"] = layers.rmsnorm_init(hd)
+        p["k_norm"] = layers.rmsnorm_init(hd)
+    return p
+
+
+def project_qkv(params, x, cfg: ModelConfig, positions, *, use_rope=True):
+    """x: [B, S, d] -> q [B,S,H,Dh], k/v [B,S,Hkv,Dh] (roped, normed)."""
+    b, s, _ = x.shape
+    hd = cfg.resolved_head_dim
+    dt = x.dtype
+    q = jnp.einsum("bsd,de->bse", x, params["wq"].astype(dt))
+    k = jnp.einsum("bsd,de->bse", x, params["wk"].astype(dt))
+    v = jnp.einsum("bsd,de->bse", x, params["wv"].astype(dt))
+    from repro.distributed import annotate
+    tp = annotate.axis_size("tp")
+    if cfg.n_heads % max(tp, 1) == 0:
+        # tensor-parallel heads
+        hspec = ("dp", None, "tp", None)
+    else:
+        # context parallelism fallback (e.g. gemma3: 8 heads, tp=16):
+        # shard query positions over the model axis instead
+        hspec = ("dp", "tp", None, None)
+    q = constrain(q.reshape(b, s, cfg.n_heads, hd), *hspec)
+    k = constrain(k.reshape(b, s, cfg.kv_heads, hd), "dp", None, "tp", None)
+    v = constrain(v.reshape(b, s, cfg.kv_heads, hd), "dp", None, "tp", None)
+    if cfg.qk_norm:
+        q = layers.rmsnorm(params["q_norm"], q, cfg.norm_eps)
+        k = layers.rmsnorm(params["k_norm"], k, cfg.norm_eps)
+    if use_rope:
+        q = layers.rope(q, positions, cfg.rope_theta)
+        k = layers.rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def _mask_bias(q_pos, kv_pos, *, causal: bool, window: int | None):
+    """[B, Sq, Skv] additive bias from absolute positions."""
+    qp = q_pos[:, :, None]
+    kp = kv_pos[:, None, :]
+    ok = kp >= 0
+    if causal:
+        ok &= kp <= qp
+    if window is not None:
+        ok &= kp > qp - window
+    return jnp.where(ok, 0.0, NEG)
+
+
+def mha(q, k, v, q_pos, kv_pos, *, causal=True, window=None,
+        chunk_kv: int | None = None):
+    """Grouped-query attention.  q [B,Sq,H,Dh]; k/v [B,Skv,Hkv,Dh].
+    Returns [B,Sq,H,Dh]."""
+    b, sq, h, hd = q.shape
+    hkv = k.shape[2]
+    g = h // hkv
+    qg = q.reshape(b, sq, hkv, g, hd)
+    scale = hd ** -0.5
+
+    if chunk_kv is None or k.shape[1] <= chunk_kv:
+        s = jnp.einsum("bqhgd,bkhd->bhgqk", qg, k).astype(jnp.float32)
+        s = s * scale + _mask_bias(q_pos, kv_pos, causal=causal,
+                                   window=window)[:, None, None]
+        p = jax.nn.softmax(s, axis=-1).astype(q.dtype)
+        o = jnp.einsum("bhgqk,bkhd->bqhgd", p, v)
+        return o.reshape(b, sq, h, hd)
+
+    # flash-style: scan over KV chunks with online softmax
+    skv = k.shape[1]
+    assert skv % chunk_kv == 0, (skv, chunk_kv)
+    n_chunks = skv // chunk_kv
+    k_c = k.reshape(b, n_chunks, chunk_kv, hkv, hd).swapaxes(0, 1)
+    v_c = v.reshape(b, n_chunks, chunk_kv, hkv, hd).swapaxes(0, 1)
+    pos_c = kv_pos.reshape(b, n_chunks, chunk_kv).swapaxes(0, 1)
+
+    def step(carry, inp):
+        m, l, o = carry
+        kc, vc, pc = inp
+        s = jnp.einsum("bqhgd,bkhd->bhgqk", qg, kc).astype(jnp.float32)
+        s = s * scale + _mask_bias(q_pos, pc, causal=causal,
+                                   window=window)[:, None, None]
+        m_new = jnp.maximum(m, s.max(-1))
+        p = jnp.exp(s - m_new[..., None])
+        corr = jnp.exp(m - m_new)
+        l = l * corr + p.sum(-1)
+        pv = jnp.einsum("bhgqk,bkhd->bhgqd", p.astype(q.dtype), vc)
+        o = o * corr[..., None] + pv.astype(jnp.float32)
+        return (m_new, l, o), None
+
+    m0 = jnp.full((b, hkv, g, sq), NEG, jnp.float32)
+    l0 = jnp.zeros((b, hkv, g, sq), jnp.float32)
+    o0 = jnp.zeros((b, hkv, g, sq, hd), jnp.float32)
+    (m, l, o), _ = jax.lax.scan(step, (m0, l0, o0), (k_c, v_c, pos_c))
+    o = o / jnp.maximum(l, 1e-30)[..., None]
+    # [b,hkv,g,sq,hd] -> [b,sq,hkv,g,hd] -> [b,sq,h,hd] (head order must
+    # stay kv-major to match the q reshape)
+    return o.transpose(0, 3, 1, 2, 4).reshape(b, sq, h, hd).astype(q.dtype)
+
+
+def self_attention(params, x, cfg: ModelConfig, positions, *,
+                   causal=True, window=None):
+    """Training / encoding path (no cache)."""
+    q, k, v = project_qkv(params, x, cfg, positions)
+    chunk = cfg.attn_chunk_kv if x.shape[1] >= cfg.attn_chunk_min_seq \
+        else None
+    o = mha(q, k, v, positions, positions,
+            causal=causal, window=window, chunk_kv=chunk)
+    b, s, _ = x.shape
+    return jnp.einsum("bse,ed->bsd", o.reshape(b, s, -1),
+                      params["wo"].astype(x.dtype))
+
+
+# ---------------------------------------------------------------------------
+# KV cache (full or ring buffer)
+# ---------------------------------------------------------------------------
+
+
+def cache_init(cfg: ModelConfig, batch: int, max_len: int,
+               window: int | None, dtype) -> dict:
+    slots = min(max_len, window) if window else max_len
+    hd = cfg.resolved_head_dim
+    return {
+        "k": jnp.zeros((batch, slots, cfg.kv_heads, hd), dtype),
+        "v": jnp.zeros((batch, slots, cfg.kv_heads, hd), dtype),
+        "pos": jnp.full((batch, slots), -1, jnp.int32),
+    }
+
+
+def cache_insert(cache: dict, k, v, positions) -> dict:
+    """Scatter S new KV rows at ``positions % slots`` (ring semantics;
+    for full caches slots == max_len so the modulo is the identity)."""
+    slots = cache["k"].shape[1]
+    idx = positions % slots                       # [B, S]
+    k_new = _scatter_rows(cache["k"], idx, k)
+    v_new = _scatter_rows(cache["v"], idx, v)
+    pos_new = jax.vmap(lambda c, i, p: c.at[i].set(p))(
+        cache["pos"], idx, positions)
+    return {"k": k_new, "v": v_new, "pos": pos_new}
+
+
+def _scatter_rows(buf, idx, rows):
+    # buf [B, slots, ...], idx [B, S], rows [B, S, ...]
+    return jax.vmap(lambda b, i, r: b.at[i].set(r))(buf, idx, rows)
+
+
+def attend_cache(params, x, cfg: ModelConfig, cache: dict, positions, *,
+                 window=None, update: bool = True):
+    """Self-attention against (and optionally updating) a cache.
+    x: [B, S, d] (S=1 decode, S=seq prefill)."""
+    q, k, v = project_qkv(params, x, cfg, positions)
+    if update:
+        cache = cache_insert(cache, k, v, positions)
+    chunk = cfg.attn_chunk_kv \
+        if cache["k"].shape[1] >= cfg.attn_chunk_min_seq else None
+    o = mha(q, cache["k"], cache["v"], positions, cache["pos"],
+            causal=True, window=window, chunk_kv=chunk)
+    b, s, _ = x.shape
+    out = jnp.einsum("bse,ed->bsd", o.reshape(b, s, -1),
+                     params["wo"].astype(x.dtype))
+    return out, cache
+
+
+# ---------------------------------------------------------------------------
+# Cross attention (enc-dec)
+# ---------------------------------------------------------------------------
+
+
+def cross_attn_init(key, cfg: ModelConfig):
+    return attn_init(key, cfg)
+
+
+def cross_attention(params, x, enc_kv, cfg: ModelConfig):
+    """x: [B, Sq, d]; enc_kv: either a dict with precomputed k/v
+    [B, Senc, Hkv, Dh] + pos [B, Senc], or the raw encoder output
+    [B, Senc, d] (projected lazily with this layer's wk/wv)."""
+    if not isinstance(enc_kv, dict):
+        enc_kv = encoder_kv(params, enc_kv, cfg)
+    b, s, _ = x.shape
+    hd = cfg.resolved_head_dim
+    dt = x.dtype
+    q = jnp.einsum("bsd,de->bse", x, params["wq"].astype(dt))
+    q = q.reshape(b, s, cfg.n_heads, hd)
+    if cfg.qk_norm:
+        q = layers.rmsnorm(params["q_norm"], q, cfg.norm_eps)
+    qpos = jnp.zeros((b, s), jnp.int32)
+    o = mha(q, enc_kv["k"], enc_kv["v"], qpos, enc_kv["pos"], causal=False)
+    return jnp.einsum("bse,ed->bsd", o.reshape(b, s, -1),
+                      params["wo"].astype(dt))
+
+
+def encoder_kv(params, enc_out, cfg: ModelConfig):
+    """Precompute cross-attention K/V from encoder output."""
+    b, s, _ = enc_out.shape
+    hd = cfg.resolved_head_dim
+    dt = enc_out.dtype
+    k = jnp.einsum("bsd,de->bse", enc_out, params["wk"].astype(dt))
+    v = jnp.einsum("bsd,de->bse", enc_out, params["wv"].astype(dt))
+    k = k.reshape(b, s, cfg.kv_heads, hd)
+    v = v.reshape(b, s, cfg.kv_heads, hd)
+    if cfg.qk_norm:
+        k = layers.rmsnorm(params["k_norm"], k, cfg.norm_eps)
+    return {"k": k, "v": v, "pos": jnp.broadcast_to(
+        jnp.arange(s, dtype=jnp.int32)[None], (b, s))}

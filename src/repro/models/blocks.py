@@ -1,0 +1,110 @@
+"""One decoder/encoder block: mixer (attention or mamba) + FFN (dense or
+MoE), pre-norm residual wiring.  Uniform across the zoo:
+
+    x = x + mixer(norm1(x))
+    x = x + ffn(norm2(x))      # skipped when the arch has no FFN (mamba-1)
+
+Enc-dec decoder blocks add ``x = x + cross_attn(norm_cross(x), enc)``.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.distributed.annotate import constrain
+from repro.models import attention, layers, mamba, moe
+from repro.models.config import ModelConfig
+
+
+def block_init(key, cfg: ModelConfig, pos: int, *, cross: bool = False):
+    kind = cfg.pattern[pos % cfg.period]
+    ks = layers.split_keys(key, 5)
+    p = {"norm1": layers.rmsnorm_init(cfg.d_model)}
+    if kind == "attn":
+        p["mixer"] = attention.attn_init(ks[0], cfg)
+    else:
+        p["mixer"] = mamba.mamba_init(ks[0], cfg)
+    if cross:
+        p["norm_cross"] = layers.rmsnorm_init(cfg.d_model)
+        p["cross"] = attention.cross_attn_init(ks[1], cfg)
+    if _has_ffn(cfg, pos):
+        p["norm2"] = layers.rmsnorm_init(cfg.d_model)
+        if _is_moe(cfg, pos):
+            p["ffn"] = moe.moe_init(ks[2], cfg)
+        else:
+            p["ffn"] = layers.mlp_init(ks[2], cfg.d_model, cfg.d_ff,
+                                       cfg.gated_mlp)
+    return p
+
+
+def _is_moe(cfg: ModelConfig, pos: int) -> bool:
+    return bool(cfg.moe_experts and cfg.moe_positions and
+                cfg.moe_positions[pos % cfg.period])
+
+
+def _has_ffn(cfg: ModelConfig, pos: int) -> bool:
+    return _is_moe(cfg, pos) or cfg.d_ff > 0
+
+
+def _ffn(params, x, cfg: ModelConfig, pos: int):
+    """Returns (y, aux)."""
+    if not _has_ffn(cfg, pos):
+        return jnp.zeros_like(x), 0.0
+    h = layers.rmsnorm(params["norm2"], x, cfg.norm_eps)
+    if _is_moe(cfg, pos):
+        y, aux = moe.moe_ffn(params["ffn"], h, cfg)
+        return y, aux
+    return layers.mlp(params["ffn"], h, cfg), 0.0
+
+
+def block_forward(params, x, cfg: ModelConfig, pos: int, positions, *,
+                  causal=True, enc_kv=None):
+    """Full-sequence (train / encode) path.  Returns (x, aux_loss)."""
+    kind = cfg.pattern[pos % cfg.period]
+    x = constrain(x, "dp", "tp" if cfg.seq_parallel else None, None)
+    h = layers.rmsnorm(params["norm1"], x, cfg.norm_eps)
+    if kind == "attn":
+        mix = attention.self_attention(
+            params["mixer"], h, cfg, positions, causal=causal,
+            window=cfg.windows[pos % cfg.period])
+    else:
+        mix = mamba.mamba_forward(params["mixer"], h, cfg)
+    x = x + mix
+    if enc_kv is not None:
+        hc = layers.rmsnorm(params["norm_cross"], x, cfg.norm_eps)
+        x = x + attention.cross_attention(params["cross"], hc, enc_kv, cfg)
+    y, aux = _ffn(params, x, cfg, pos)
+    return x + y, aux
+
+
+def block_cache_init(cfg: ModelConfig, pos: int, batch: int, max_len: int,
+                     dtype):
+    kind = cfg.pattern[pos % cfg.period]
+    if kind == "attn":
+        return attention.cache_init(cfg, batch, max_len,
+                                    cfg.windows[pos % cfg.period], dtype)
+    return mamba.mamba_state_init(cfg, batch, dtype)
+
+
+def block_step(params, x, cfg: ModelConfig, pos: int, positions, cache, *,
+               enc_kv=None, update_cache=True):
+    """Cached path (decode step or prefill-into-cache).
+    Returns (x, new_cache)."""
+    kind = cfg.pattern[pos % cfg.period]
+    h = layers.rmsnorm(params["norm1"], x, cfg.norm_eps)
+    if kind == "attn":
+        mix, cache = attention.attend_cache(
+            params["mixer"], h, cfg, cache, positions,
+            window=cfg.windows[pos % cfg.period], update=update_cache)
+    else:
+        if x.shape[1] == 1:
+            mix, cache = mamba.mamba_step(params["mixer"], h, cfg, cache)
+        else:  # prefill: run the full scan, keep the final state
+            mix, cache = mamba.mamba_forward(params["mixer"], h, cfg,
+                                             return_state=True)
+    x = x + mix
+    if enc_kv is not None:
+        hc = layers.rmsnorm(params["norm_cross"], x, cfg.norm_eps)
+        x = x + attention.cross_attention(params["cross"], hc, enc_kv, cfg)
+    y, _ = _ffn(params, x, cfg, pos)
+    return x + y, cache

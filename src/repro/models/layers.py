@@ -1,0 +1,125 @@
+"""Base layers: norms, MLPs, embeddings, rotary embeddings.
+
+Parameters are plain dict pytrees; every apply function takes
+``(params, x, cfg)``-style arguments and casts to the compute dtype at the
+point of use (params can be stored fp32 for training or bf16 for serving).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.annotate import constrain
+from repro.models.config import ModelConfig
+
+
+def cdtype(cfg: ModelConfig):
+    return jnp.dtype(cfg.dtype)
+
+
+# ---------------------------------------------------------------------------
+# init helpers
+# ---------------------------------------------------------------------------
+
+
+def dense_init(key, d_in: int, d_out: int, dtype=jnp.float32):
+    scale = (1.0 / d_in) ** 0.5
+    return jax.random.normal(key, (d_in, d_out), dtype) * scale
+
+
+def split_keys(key, n: int):
+    return list(jax.random.split(key, n))
+
+
+# ---------------------------------------------------------------------------
+# norms
+# ---------------------------------------------------------------------------
+
+
+def rmsnorm_init(d: int):
+    return {"scale": jnp.ones((d,), jnp.float32)}
+
+
+def rmsnorm(params, x, eps: float):
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps)
+    return (y * params["scale"].astype(jnp.float32)).astype(dt)
+
+
+# ---------------------------------------------------------------------------
+# MLP (gated silu / plain gelu)
+# ---------------------------------------------------------------------------
+
+
+def mlp_init(key, d: int, ff: int, gated: bool):
+    ks = split_keys(key, 3)
+    p = {"wi": dense_init(ks[0], d, ff), "wo": dense_init(ks[1], ff, d)}
+    if gated:
+        p["wg"] = dense_init(ks[2], d, ff)
+    return p
+
+
+def mlp(params, x, cfg: ModelConfig):
+    dt = x.dtype
+    wi = params["wi"].astype(dt)
+    h = jnp.einsum("...d,df->...f", x, wi)
+    if cfg.gated_mlp:
+        g = jnp.einsum("...d,df->...f", x, params["wg"].astype(dt))
+        h = _act(cfg.act)(g) * h
+    else:
+        h = _act(cfg.act)(h)
+    h = constrain(h, *(("dp",) + (None,) * (h.ndim - 2) + ("tp",)))
+    return jnp.einsum("...f,fd->...d", h, params["wo"].astype(dt))
+
+
+def _act(name: str):
+    return {"silu": jax.nn.silu, "gelu": jax.nn.gelu,
+            "relu": jax.nn.relu}[name]
+
+
+# ---------------------------------------------------------------------------
+# embedding / logits
+# ---------------------------------------------------------------------------
+
+
+def embed_init(key, vocab: int, d: int):
+    return {"table": jax.random.normal(key, (vocab, d), jnp.float32) * 0.02}
+
+
+def embed(params, tokens, cfg: ModelConfig):
+    out = params["table"].astype(cdtype(cfg))[tokens]
+    return constrain(out, "dp", None, None)
+
+
+def logits(params_head, x, cfg: ModelConfig):
+    """``params_head``: the lm head table [vocab, d] (may be the tied
+    embedding table).  fp32 logits (loss stability), vocab-sharded over the
+    model axis (a replicated [tokens, 262k] fp32 tensor would dominate HBM
+    on wide-vocab archs)."""
+    out = jnp.einsum("...d,vd->...v", x.astype(jnp.float32),
+                     params_head.astype(jnp.float32))
+    if cfg.logit_softcap:
+        c = cfg.logit_softcap
+        out = jnp.tanh(out / c) * c
+    return constrain(out, *(("dp",) + (None,) * (out.ndim - 2) + ("tp",)))
+
+
+# ---------------------------------------------------------------------------
+# rotary position embedding
+# ---------------------------------------------------------------------------
+
+
+def rope(x, positions, theta: float):
+    """x: [B, S, H, D]; positions: int32 [B, S] (absolute)."""
+    d = x.shape[-1]
+    half = d // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions.astype(jnp.float32)[..., None] * freqs   # [B, S, half]
+    cos = jnp.cos(ang)[:, :, None, :].astype(x.dtype)
+    sin = jnp.sin(ang)[:, :, None, :].astype(x.dtype)
+    x1, x2 = x[..., :half], x[..., half:]
+    return jnp.concatenate([x1 * cos - x2 * sin,
+                            x2 * cos + x1 * sin], axis=-1)

@@ -1,0 +1,161 @@
+"""Mamba-1 selective SSM layer (falcon-mamba; jamba's SSM positions).
+
+Training path: chunked parallel scan -- ``lax.scan`` over sequence chunks,
+``lax.associative_scan`` inside a chunk.  This bounds the materialized
+state tensor to ``[B, chunk, d_inner, d_state]`` (the full-sequence
+associative scan would materialize S*d_inner*d_state and OOM at 4k+ on
+jamba-scale widths).
+
+Decode path: O(1) single-step state update.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.annotate import constrain
+from repro.models import layers
+from repro.models.config import ModelConfig
+
+
+def mamba_init(key, cfg: ModelConfig):
+    d, di, ds, dr = cfg.d_model, cfg.d_inner, cfg.ssm_state, cfg.dt_rank
+    ks = layers.split_keys(key, 6)
+    A = jnp.tile(jnp.arange(1, ds + 1, dtype=jnp.float32)[None], (di, 1))
+    return {
+        "in_proj": layers.dense_init(ks[0], d, 2 * di),
+        "conv_w": jax.random.normal(ks[1], (cfg.ssm_conv, di),
+                                    jnp.float32) * 0.1,
+        "x_proj": layers.dense_init(ks[2], di, dr + 2 * ds),
+        "dt_w": layers.dense_init(ks[3], dr, di),
+        "dt_b": jnp.zeros((di,), jnp.float32),
+        "A_log": jnp.log(A),
+        "D": jnp.ones((di,), jnp.float32),
+        "out_proj": layers.dense_init(ks[4], di, d),
+    }
+
+
+def _ssm_inputs(params, x, cfg: ModelConfig):
+    """Shared projections: returns (u, z, dt, B, C) on [B, S, ...]."""
+    di, ds, dr = cfg.d_inner, cfg.ssm_state, cfg.dt_rank
+    dt_ = x.dtype
+    xz = jnp.einsum("bsd,de->bse", x, params["in_proj"].astype(dt_))
+    u, z = jnp.split(xz, 2, axis=-1)          # [B, S, di] each
+    return (constrain(u, "dp", None, "tp"),
+            constrain(z, "dp", None, "tp"))
+
+
+def _post_conv(params, u, cfg: ModelConfig):
+    di, ds, dr = cfg.d_inner, cfg.ssm_state, cfg.dt_rank
+    dt_ = u.dtype
+    u = jax.nn.silu(u)
+    xdbc = jnp.einsum("bsi,ie->bse", u, params["x_proj"].astype(dt_))
+    dt_r, B, C = jnp.split(xdbc, [dr, dr + ds], axis=-1)
+    dt = jax.nn.softplus(
+        jnp.einsum("bsr,ri->bsi", dt_r, params["dt_w"].astype(dt_))
+        .astype(jnp.float32) + params["dt_b"])     # [B, S, di] fp32
+    return u, dt, B.astype(jnp.float32), C.astype(jnp.float32)
+
+
+def _causal_conv(params, u, cfg: ModelConfig, *, conv_state=None):
+    """Depthwise causal conv, width ssm_conv.  If ``conv_state`` is given
+    ([B, w-1, di], previous inputs), runs in streaming mode and returns the
+    updated state."""
+    w = cfg.ssm_conv
+    cw = params["conv_w"].astype(u.dtype)          # [w, di]
+    if conv_state is None:
+        pad = jnp.zeros((u.shape[0], w - 1, u.shape[2]), u.dtype)
+    else:
+        pad = conv_state.astype(u.dtype)
+    full = jnp.concatenate([pad, u], axis=1)       # [B, S+w-1, di]
+    out = sum(full[:, i:i + u.shape[1]] * cw[i] for i in range(w))
+    new_state = full[:, -(w - 1):] if w > 1 else pad
+    return out, new_state
+
+
+def mamba_forward(params, x, cfg: ModelConfig, *, return_state=False):
+    """Training/prefill-style full-sequence forward.  x: [B, S, d]."""
+    b, s, _ = x.shape
+    di, ds = cfg.d_inner, cfg.ssm_state
+    u, z = _ssm_inputs(params, x, cfg)
+    u, conv_state = _causal_conv(params, u, cfg)
+    u, dt, B, C = _post_conv(params, u, cfg)
+
+    A = -jnp.exp(params["A_log"])                  # [di, ds]
+    chunk = min(cfg.ssm_chunk, s)
+    while s % chunk:   # largest divisor <= ssm_chunk (exact chunking)
+        chunk -= 1
+    n_chunks = s // chunk
+
+    def resh(t):
+        return t.reshape(b, n_chunks, chunk, *t.shape[2:]).swapaxes(0, 1)
+
+    u_c, dt_c, B_c, C_c = map(resh, (u, dt, B, C))
+
+    scan_dt = jnp.dtype(cfg.ssm_scan_dtype)
+
+    def chunk_step(h0, inp):
+        uc, dtc, Bc, Cc = inp                      # [B, chunk, ...]
+        # elementwise decay & input  [B, chunk, di, ds] -- the dominant
+        # HBM traffic of mamba training; scan_dt=bf16 halves it (decay
+        # factors are in (0,1], products over <=chunk steps stay
+        # well-conditioned; dt itself is computed in fp32)
+        dA = jnp.exp(dtc[..., None] * A).astype(scan_dt)
+        dBu = ((dtc * uc.astype(jnp.float32))[..., None]
+               * Bc[:, :, None, :]).astype(scan_dt)
+
+        def combine(a, b_):
+            (a1, b1), (a2, b2) = a, b_
+            return (a2 * a1, a2 * b1 + b2)
+
+        # prepend carry as an extra step
+        dA_full = jnp.concatenate(
+            [jnp.ones_like(dA[:, :1]), dA], axis=1)
+        dBu_full = jnp.concatenate([h0[:, None].astype(scan_dt), dBu],
+                                   axis=1)
+        _, hs = jax.lax.associative_scan(combine, (dA_full, dBu_full),
+                                         axis=1)
+        h_last = hs[:, -1].astype(jnp.float32)
+        y = jnp.einsum("bcis,bcs->bci", hs[:, 1:],
+                       Cc.astype(scan_dt)).astype(jnp.float32)
+        return h_last, y
+
+    h0 = jnp.zeros((b, di, ds), jnp.float32)
+    h_last, y_c = jax.lax.scan(chunk_step, h0, (u_c, dt_c, B_c, C_c))
+    y = y_c.swapaxes(0, 1).reshape(b, s, di)
+    y = y + u.astype(jnp.float32) * params["D"]
+    y = (y.astype(x.dtype)) * jax.nn.silu(z)
+    out = jnp.einsum("bsi,id->bsd", y, params["out_proj"].astype(x.dtype))
+    if return_state:
+        return out, {"conv": conv_state, "ssm": h_last}
+    return out
+
+
+# ---------------------------------------------------------------------------
+# decode (streaming) path
+# ---------------------------------------------------------------------------
+
+
+def mamba_state_init(cfg: ModelConfig, batch: int, dtype) -> dict:
+    return {
+        "conv": jnp.zeros((batch, cfg.ssm_conv - 1, cfg.d_inner), dtype),
+        "ssm": jnp.zeros((batch, cfg.d_inner, cfg.ssm_state), jnp.float32),
+    }
+
+
+def mamba_step(params, x, cfg: ModelConfig, state: dict):
+    """Single-token decode. x: [B, 1, d].  Returns (y, new_state)."""
+    u, z = _ssm_inputs(params, x, cfg)
+    u, conv_new = _causal_conv(params, u, cfg, conv_state=state["conv"])
+    u, dt, B, C = _post_conv(params, u, cfg)
+    A = -jnp.exp(params["A_log"])
+    dA = jnp.exp(dt[:, 0, :, None] * A)                    # [B, di, ds]
+    dBu = (dt[:, 0] * u[:, 0].astype(jnp.float32))[..., None] \
+        * B[:, 0, None, :]
+    h = dA * state["ssm"] + dBu
+    y = jnp.einsum("bis,bs->bi", h, C[:, 0])[:, None, :]
+    y = y + u.astype(jnp.float32) * params["D"]
+    y = y.astype(x.dtype) * jax.nn.silu(z)
+    out = jnp.einsum("bsi,id->bsd", y, params["out_proj"].astype(x.dtype))
+    return out, {"conv": conv_new, "ssm": h}

@@ -1,0 +1,311 @@
+"""The language model: init / forward / prefill / decode over any zoo config.
+
+Layer stacks are executed as ``lax.scan`` over *periods* (HLO size stays
+O(period) regardless of depth; see config.py).  Caches mirror the stacked
+parameter layout, so decode is a scan over (params, cache) with the updated
+cache as the scan output.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention, blocks, layers
+from repro.models.config import ModelConfig
+
+VOCAB_PAD = 2048
+
+
+def padded_vocab(cfg: ModelConfig) -> int:
+    return -(-cfg.vocab // VOCAB_PAD) * VOCAB_PAD
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+
+def init(key, cfg: ModelConfig):
+    ks = layers.split_keys(key, 8)
+    vp = padded_vocab(cfg)
+    params = {
+        "embed": layers.embed_init(ks[0], vp, cfg.d_model),
+        "final_norm": layers.rmsnorm_init(cfg.d_model),
+    }
+    if not cfg.tie_embeddings:
+        params["head"] = layers.embed_init(ks[1], vp, cfg.d_model)["table"]
+
+    cross = cfg.enc_dec
+    params["blocks"] = _stack_init(ks[2], cfg, cfg.n_periods, cross=cross)
+    params["tail"] = [
+        blocks.block_init(k, cfg, cfg.n_periods * cfg.period + i,
+                          cross=cross)
+        for i, k in enumerate(
+            layers.split_keys(ks[3], max(1, cfg.n_tail))[:cfg.n_tail])]
+
+    if cfg.enc_dec:
+        n_enc = cfg.n_enc_layers
+        n_enc_p = n_enc // cfg.period
+        params["enc_blocks"] = _stack_init(ks[4], cfg, n_enc_p, cross=False)
+        params["enc_tail"] = [
+            blocks.block_init(k, cfg, n_enc_p * cfg.period + i, cross=False)
+            for i, k in enumerate(layers.split_keys(
+                ks[5], max(1, n_enc - n_enc_p * cfg.period))
+                [:n_enc - n_enc_p * cfg.period])]
+        params["enc_norm"] = layers.rmsnorm_init(cfg.d_model)
+    if cfg.frontend is not None:
+        params["frontend"] = {
+            "proj": layers.dense_init(ks[6], cfg.d_model, cfg.d_model)}
+    return params
+
+
+def _stack_init(key, cfg: ModelConfig, n: int, *, cross: bool):
+    """{"p0": stacked block tree, "p1": ...} with leading dim n."""
+    out = {}
+    for pos in range(cfg.period):
+        keys = jax.random.split(jax.random.fold_in(key, pos), max(1, n))
+
+        def one(k, _pos=pos):
+            return blocks.block_init(k, cfg, _pos, cross=cross)
+
+        out[f"p{pos}"] = jax.vmap(one)(keys) if n > 0 else None
+    return out
+
+
+# ---------------------------------------------------------------------------
+# forward (training / encoding)
+# ---------------------------------------------------------------------------
+
+
+def _run_stack(stack, tail, x, cfg: ModelConfig, positions, *,
+               causal=True, enc_kv=None):
+    """Scan the stacked periods, then unrolled tail.  Returns (x, aux)."""
+
+    def body(carry, lp):
+        x, aux = carry
+        for pos in range(cfg.period):
+            x, a = blocks.block_forward(lp[f"p{pos}"], x, cfg, pos,
+                                        positions, causal=causal,
+                                        enc_kv=enc_kv)
+            aux = aux + a
+        return (x, aux), None
+
+    body_fn = jax.checkpoint(body) if cfg.remat else body
+    aux = jnp.zeros((), jnp.float32)
+    if stack and stack.get("p0") is not None:
+        (x, aux), _ = jax.lax.scan(body_fn, (x, aux), stack)
+    for i, lp in enumerate(tail):
+        def tail_fn(x, lp=lp, i=i):
+            return blocks.block_forward(lp, x, cfg, i, positions,
+                                        causal=causal, enc_kv=enc_kv)
+        x, a = (jax.checkpoint(tail_fn) if cfg.remat else tail_fn)(x)
+        aux = aux + a
+    return x, aux
+
+
+def _encode(params, enc_input, cfg: ModelConfig):
+    """Encoder over stub frontend embeddings [B, S_enc, d]."""
+    x = enc_input.astype(layers.cdtype(cfg))
+    x = jnp.einsum("bsd,de->bse", x, params["frontend"]["proj"]
+                   .astype(x.dtype))
+    b, s, _ = x.shape
+    pos = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32)[None], (b, s))
+    x, aux = _run_stack(params["enc_blocks"], params["enc_tail"], x, cfg,
+                        pos, causal=False)
+    return layers.rmsnorm(params["enc_norm"], x, cfg.norm_eps), aux
+
+
+def _embed_inputs(params, batch, cfg: ModelConfig):
+    """Token (+ vision prefix) embedding. Returns (x, positions)."""
+    tokens = batch["tokens"]
+    x = layers.embed(params["embed"], tokens, cfg)
+    if cfg.frontend == "vision":
+        patches = batch["patches"].astype(x.dtype)   # [B, P, d]
+        patches = jnp.einsum("bpd,de->bpe", patches,
+                             params["frontend"]["proj"].astype(x.dtype))
+        x = jnp.concatenate([patches, x], axis=1)
+    b, s, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32)[None],
+                                 (b, s))
+    return x, positions
+
+
+def forward_hidden(params, batch, cfg: ModelConfig):
+    """Backbone forward to the final normed hidden states.
+    Returns (x [B,S,d], aux_loss)."""
+    enc_kv = None
+    aux_total = jnp.zeros((), jnp.float32)
+    x, positions = _embed_inputs(params, batch, cfg)
+    if cfg.enc_dec:
+        enc_out, aux_e = _encode(params, batch["frames"], cfg)
+        aux_total += aux_e
+        # per-layer cross KV are computed inside blocks; pass encoder output
+        # through a shared projection-free view
+        enc_kv = {"out": enc_out}
+    x, aux = _run_stack(params["blocks"], params["tail"], x, cfg, positions,
+                        causal=True,
+                        enc_kv=_enc_kv_view(enc_kv, cfg))
+    aux_total += aux
+    x = layers.rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    return x, aux_total
+
+
+def forward(params, batch, cfg: ModelConfig):
+    """Full forward.  ``batch``: {"tokens": [B,S] int32} plus
+    "frames" [B,S,d] (audio enc-dec) or "patches" [B,P,d] (vision).
+    Returns (logits [B,S,vocab_padded], aux_loss)."""
+    x, aux_total = forward_hidden(params, batch, cfg)
+    head = params.get("head", params["embed"]["table"])
+    return layers.logits(head, x, cfg), aux_total
+
+
+def _enc_kv_view(enc_kv, cfg):
+    """Cross-attention K/V are projected lazily per layer from the raw
+    encoder output (each decoder layer owns its wk/wv)."""
+    if enc_kv is None:
+        return None
+    return enc_kv["out"]
+
+
+# ---------------------------------------------------------------------------
+# serving: prefill + decode
+# ---------------------------------------------------------------------------
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int, dtype=None):
+    """Cache pytree mirroring the stacked block layout."""
+    dtype = dtype or layers.cdtype(cfg)
+    n = cfg.n_periods
+
+    def stacked(pos):
+        one = blocks.block_cache_init(cfg, pos, batch, max_len, dtype)
+        return jax.tree.map(
+            lambda a: jnp.broadcast_to(a[None], (n, *a.shape)).copy(), one)
+
+    cache = {"blocks": {f"p{pos}": stacked(pos)
+                        for pos in range(cfg.period)},
+             "tail": [blocks.block_cache_init(
+                 cfg, cfg.n_periods * cfg.period + i, batch, max_len, dtype)
+                 for i in range(cfg.n_tail)]}
+    return cache
+
+
+def decode_step(params, cache, tokens, pos, cfg: ModelConfig, *,
+                enc_out=None):
+    """One decode step.  tokens [B, 1] int32; pos [B, 1] int32 absolute.
+    Returns (logits [B, 1, vocab], new_cache)."""
+    x = layers.embed(params["embed"], tokens, cfg)
+    enc_view = enc_out
+
+    def body(x, xs):
+        lp, cache_in = xs
+        new_caches = {}
+        for p in range(cfg.period):
+            x, c = blocks.block_step(lp[f"p{p}"], x, cfg, p, pos,
+                                     cache_in[f"p{p}"], enc_kv=enc_view)
+            new_caches[f"p{p}"] = c
+        return x, new_caches
+
+    if cfg.n_periods > 0:
+        x, new_stack = jax.lax.scan(body, x,
+                                    (params["blocks"], cache["blocks"]))
+    else:
+        new_stack = cache["blocks"]
+    new_tail = []
+    for i, lp in enumerate(params["tail"]):
+        x, c = blocks.block_step(lp, x, cfg, i, pos, cache["tail"][i],
+                                 enc_kv=enc_view)
+        new_tail.append(c)
+    x = layers.rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    head = params.get("head", params["embed"]["table"])
+    logit = layers.logits(head, x, cfg)
+    return logit, {"blocks": new_stack, "tail": new_tail}
+
+
+def prefill(params, batch, cfg: ModelConfig, max_len: int):
+    """Run the prompt through the stack, building the cache.
+    Returns (last_logits [B, vocab], cache, next_pos [B,1])."""
+    x, positions = _embed_inputs(params, batch, cfg)
+    b, s, _ = x.shape
+    enc_view = None
+    if cfg.enc_dec:
+        enc_out, _ = _encode(params, batch["frames"], cfg)
+        enc_view = enc_out
+    cache = init_cache(cfg, b, max_len, dtype=x.dtype)
+
+    def body(x, xs):
+        lp, cache_in = xs
+        new_caches = {}
+        for p in range(cfg.period):
+            x, c = blocks.block_step(lp[f"p{p}"], x, cfg, p, positions,
+                                     cache_in[f"p{p}"], enc_kv=enc_view)
+            new_caches[f"p{p}"] = c
+        return x, new_caches
+
+    body_fn = jax.checkpoint(body) if cfg.remat else body
+    if cfg.n_periods > 0:
+        x, new_stack = jax.lax.scan(body_fn, x,
+                                    (params["blocks"], cache["blocks"]))
+    else:
+        new_stack = cache["blocks"]
+    new_tail = []
+    for i, lp in enumerate(params["tail"]):
+        x, c = blocks.block_step(lp, x, cfg, i, positions,
+                                 cache["tail"][i], enc_kv=enc_view)
+        new_tail.append(c)
+    x = layers.rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    head = params.get("head", params["embed"]["table"])
+    logit = layers.logits(head, x[:, -1:], cfg)
+    next_pos = jnp.full((b, 1), s, jnp.int32)
+    return logit[:, 0], {"blocks": new_stack, "tail": new_tail}, next_pos
+
+
+# ---------------------------------------------------------------------------
+# loss
+# ---------------------------------------------------------------------------
+
+
+def lm_loss(params, batch, cfg: ModelConfig, *, aux_weight: float = 0.01,
+            loss_chunk: int = 1024):
+    """Next-token cross entropy (+ MoE aux).
+
+    The CE is computed in sequence chunks under remat: a monolithic
+    ``[tokens, vocab]`` fp32 logits tensor (and its backward copies) would
+    dominate HBM on wide-vocab archs (gemma3: 262k vocab), so only one
+    chunk of logits is ever materialized."""
+    x, aux = forward_hidden(params, batch, cfg)
+    labels = batch["labels"]                      # [B, S_lab]
+    # vision prefix: hidden states cover [P + S_tok]; labels align right
+    x = x[:, -labels.shape[1]:]
+    hx = x[:, :-1]
+    hl = labels[:, 1:]
+    head = params.get("head", params["embed"]["table"])
+
+    b, s, d = hx.shape
+    chunk = min(loss_chunk, s)
+    while s % chunk:
+        chunk -= 1
+    n_chunks = s // chunk
+    hx_c = hx.reshape(b, n_chunks, chunk, d).swapaxes(0, 1)
+    hl_c = hl.reshape(b, n_chunks, chunk).swapaxes(0, 1)
+
+    @jax.checkpoint
+    def ce_chunk(carry, inp):
+        xc, lc = inp
+        lg = layers.logits(head, xc, cfg)
+        mask = (lc >= 0).astype(jnp.float32)
+        lse = jax.nn.logsumexp(lg, axis=-1)
+        picked = jnp.take_along_axis(
+            lg, jnp.maximum(lc, 0)[..., None], axis=-1)[..., 0]
+        nll_sum, cnt = carry
+        return (nll_sum + ((lse - picked) * mask).sum(),
+                cnt + mask.sum()), None
+
+    (nll_sum, cnt), _ = jax.lax.scan(
+        ce_chunk, (jnp.zeros((), jnp.float32), jnp.zeros((), jnp.float32)),
+        (hx_c, hl_c))
+    loss = nll_sum / jnp.maximum(cnt, 1.0)
+    return loss + aux_weight * aux, {"ce": loss, "aux": aux}

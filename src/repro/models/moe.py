@@ -1,0 +1,223 @@
+"""Mixture-of-experts FFN with sort-based token dispatch.
+
+Two execution paths:
+
+* **dense-global** (no mesh context; single-device tests): tokens scatter
+  into one global ``[E, C, d]`` capacity buffer.  Avoids the GShard
+  ``[T, E, C]`` one-hot tensor; positions come from an argsort +
+  searchsorted ranking in O(T*k) memory.
+
+* **explicit EP** (mesh context active, experts divide the model axis
+  after phantom padding): ``shard_map`` dispatch -- local top-k, local
+  capacity buffers, ``lax.all_to_all`` over the "model" axis to the
+  expert-owning shards, batched expert einsum, all_to_all back, local
+  combine.  The data axes stay pure DP (expert weights are gathered per
+  layer by the FSDP spec, tokens never cross data shards).  This path
+  exists because the SPMD partitioner lowers a *global* scatter into a
+  model+data-sharded buffer as a full-buffer all-reduce (measured: 6.5
+  TB/device on granite-moe train_4k -- see EXPERIMENTS.md §Perf it.2).
+
+Capacity-dropped tokens fall through with zero contribution (standard
+capacity-factor routing; aux load-balance loss encourages even routing).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental.shard_map import shard_map
+from jax.sharding import PartitionSpec as P
+
+from repro.distributed import annotate
+from repro.distributed.annotate import constrain
+from repro.models import layers
+from repro.models.config import ModelConfig
+
+
+def moe_init(key, cfg: ModelConfig):
+    d = cfg.d_model
+    ff = cfg.moe_d_ff or cfg.d_ff
+    e = cfg.moe_experts
+    ks = layers.split_keys(key, 4)
+    scale_i = (1.0 / d) ** 0.5
+    scale_o = (1.0 / ff) ** 0.5
+    p = {
+        "router": layers.dense_init(ks[0], d, e),
+        "wi": jax.random.normal(ks[1], (e, d, ff), jnp.float32) * scale_i,
+        "wo": jax.random.normal(ks[2], (e, ff, d), jnp.float32) * scale_o,
+    }
+    if cfg.gated_mlp:
+        p["wg"] = jax.random.normal(ks[3], (e, d, ff), jnp.float32) * scale_i
+    return p
+
+
+def capacity(cfg: ModelConfig, n_tokens: int) -> int:
+    e, k = cfg.moe_experts, cfg.moe_top_k
+    c = int(n_tokens * k / e * cfg.capacity_factor)
+    return max(8, -(-c // 8) * 8)
+
+
+def _positions_in_expert(flat_e: jax.Array, e: int) -> jax.Array:
+    """Rank of each expanded token within its expert (O(n) memory)."""
+    n = flat_e.shape[0]
+    order = jnp.argsort(flat_e, stable=True)
+    e_sorted = flat_e[order]
+    starts = jnp.searchsorted(e_sorted, jnp.arange(e))
+    pos_sorted = jnp.arange(n) - starts[e_sorted]
+    return jnp.zeros((n,), jnp.int32).at[order].set(
+        pos_sorted.astype(jnp.int32))
+
+
+def _route(params, xt, cfg: ModelConfig):
+    """Shared router: returns (gates [t,k], eidx [t,k], aux_loss)."""
+    e, k = cfg.moe_experts, cfg.moe_top_k
+    t = xt.shape[0]
+    logits = jnp.einsum("td,de->te", xt.astype(jnp.float32),
+                        params["router"].astype(jnp.float32))
+    probs = jax.nn.softmax(logits, axis=-1)
+    gates, eidx = jax.lax.top_k(probs, k)
+    gates = gates / jnp.maximum(gates.sum(-1, keepdims=True), 1e-9)
+    me = probs.mean(0)
+    ce = jnp.zeros((e,), jnp.float32).at[eidx.reshape(-1)].add(
+        jnp.ones((t * k,), jnp.float32)) / (t * k)
+    aux = e * jnp.sum(me * ce)
+    return gates, eidx, aux
+
+
+def _expert_ffn(params, buf, cfg: ModelConfig, e_slice=None):
+    """Batched expert matmuls on ``buf [..., E?, C, d]``."""
+    dt = buf.dtype
+    wi, wo = params["wi"].astype(dt), params["wo"].astype(dt)
+    wg = params.get("wg")
+    if e_slice is not None:
+        wi, wo = wi[e_slice], wo[e_slice]
+        wg = wg[e_slice] if wg is not None else None
+    h = jnp.einsum("...ecd,edf->...ecf", buf, wi)
+    if cfg.gated_mlp:
+        g = jnp.einsum("...ecd,edf->...ecf", buf, wg.astype(dt))
+        h = layers._act(cfg.act)(g) * h
+    else:
+        h = layers._act(cfg.act)(h)
+    return jnp.einsum("...ecf,efd->...ecd", h, wo)
+
+
+def moe_ffn(params, x, cfg: ModelConfig):
+    """x: [B, S, d] -> (y, aux_loss).  Picks the EP shard_map path when a
+    mesh context is active, else the dense-global path."""
+    if annotate.active() and annotate.axis_size("tp") > 1:
+        return _moe_ffn_ep(params, x, cfg)
+    return _moe_ffn_dense(params, x, cfg)
+
+
+def _moe_ffn_dense(params, x, cfg: ModelConfig):
+    b, s, d = x.shape
+    e, k = cfg.moe_experts, cfg.moe_top_k
+    t = b * s
+    xt = x.reshape(t, d)
+    dt = x.dtype
+
+    gates, eidx, aux = _route(params, xt, cfg)
+    n = t * k
+    flat_e = eidx.reshape(n)
+    pos = _positions_in_expert(flat_e, e)
+    c = capacity(cfg, t)
+    keep = pos < c
+    dst = jnp.where(keep, flat_e * c + pos, e * c)        # e*c = dropped
+
+    src_tok = jnp.repeat(jnp.arange(t), k)
+    buf = jnp.zeros((e * c + 1, d), dt).at[dst].set(
+        xt[src_tok], mode="drop")
+    buf = constrain(buf[:-1].reshape(e, c, d), "tp", None, None)
+    out_buf = _expert_ffn(params, buf, cfg)
+
+    flat_out = out_buf.reshape(e * c, d)
+    picked = jnp.where(keep[:, None],
+                       flat_out[jnp.clip(dst, 0, e * c - 1)], 0)
+    w = gates.reshape(n)[:, None].astype(dt)
+    y = jnp.zeros((t, d), dt).at[src_tok].add(picked * w)
+    return y.reshape(b, s, d), aux
+
+
+def _moe_ffn_ep(params, x, cfg: ModelConfig):
+    """Explicit expert parallelism: shard_map over (data..., model).
+
+    Every model shard owns ``e_pad / tp`` experts (phantom-padded when the
+    expert count does not divide the axis; phantoms receive no routing).
+    Tokens are replicated across the model axis, so routing is identical
+    on every shard; each shard slices out the send-buffer block destined
+    for it via one all_to_all, runs its experts, and a second all_to_all
+    returns the outputs.  The data axes carry pure DP.
+    """
+    ctx = annotate._ctx()
+    mesh, dp_axes = ctx["mesh"], ctx["dp"]
+    tp = mesh.shape["model"]
+    e, k = cfg.moe_experts, cfg.moe_top_k
+    e_pad = -(-e // tp) * tp
+    e_loc = e_pad // tp
+    b, s, d = x.shape
+    dp = annotate.axis_size("dp")
+    if dp <= 1 or b % dp != 0:
+        dp_axes = ()   # batch unshardable: replicate over data
+        dp = 1
+    t_loc = (b // dp) * s
+    # each model shard dispatches a disjoint 1/tp slice of the local
+    # tokens (sequence-parallel MoE): without this, the replicated token
+    # batch makes every expert process each token tp times (measured 16x
+    # redundant expert FLOPs -- EXPERIMENTS.md §Perf it.3)
+    seq_split = t_loc % tp == 0 and t_loc >= tp
+    t_eff = t_loc // tp if seq_split else t_loc
+    c_loc = max(8, -(-int(t_eff * k / e_pad * cfg.capacity_factor)) //
+                8 * 8)
+    gated = "wg" in params
+
+    def pad_e(w):
+        return jnp.pad(w, ((0, e_pad - e),) + ((0, 0),) * (w.ndim - 1))
+
+    weights = [params["router"], pad_e(params["wi"]), pad_e(params["wo"])]
+    if gated:
+        weights.append(pad_e(params["wg"]))
+
+    def body(xt_b, router, wi, wo, *maybe_wg):
+        # xt_b [b_loc, s, d] (replicated over model); wi/wo [e_loc, d|ff, .]
+        dt = xt_b.dtype
+        xt = xt_b.reshape(-1, d)
+        if seq_split:
+            i = jax.lax.axis_index("model")
+            xt = jax.lax.dynamic_slice_in_dim(xt, i * t_eff, t_eff)
+        gates, eidx, aux = _route({"router": router}, xt, cfg)
+        aux_axes = tuple(dp_axes) + (("model",) if seq_split else ())
+        if aux_axes:
+            aux = jax.lax.pmean(aux, aux_axes)
+        n = t_eff * k
+        flat_e = eidx.reshape(n)
+        pos = _positions_in_expert(flat_e, e_pad)
+        keep = pos < c_loc
+        dst = jnp.where(keep, flat_e * c_loc + pos, e_pad * c_loc)
+        src_tok = jnp.repeat(jnp.arange(t_eff), k)
+        send = jnp.zeros((e_pad * c_loc + 1, d), dt).at[dst].set(
+            xt[src_tok], mode="drop")[:-1]
+        send = send.reshape(tp, e_loc, c_loc, d)   # dim0 = dest shard
+        recv = jax.lax.all_to_all(send, "model", 0, 0, tiled=True)
+        # recv [tp(source), e_loc, c_loc, d]; run local experts
+        lp = {"wi": wi, "wo": wo}
+        if maybe_wg:
+            lp["wg"] = maybe_wg[0]
+        out = _expert_ffn(lp, recv, cfg)
+        back = jax.lax.all_to_all(out, "model", 0, 0, tiled=True)
+        flat_out = back.reshape(e_pad * c_loc, d)
+        picked = jnp.where(keep[:, None],
+                           flat_out[jnp.clip(dst, 0, e_pad * c_loc - 1)],
+                           0)
+        w = gates.reshape(n)[:, None].astype(dt)
+        y = jnp.zeros((t_eff, d), dt).at[src_tok].add(picked * w)
+        if seq_split:
+            y = jax.lax.all_gather(y, "model", axis=0, tiled=True)
+        return y.reshape(xt_b.shape), aux
+
+    bspec = P(dp_axes if dp_axes else None, None, None)
+    wspec = P("model", None, None)
+    in_specs = (bspec, P(None, None), wspec, wspec) + \
+        ((wspec,) if gated else ())
+    fn = shard_map(body, mesh=mesh, in_specs=in_specs,
+                   out_specs=(bspec, P()), check_rep=False)
+    return fn(x, *weights)

@@ -1,0 +1,7 @@
+"""Hardware constants for the roofline analysis (TPU v5e-class chip, per
+the assignment): 197 TFLOP/s bf16, 819 GB/s HBM, ~50 GB/s per ICI link."""
+
+PEAK_FLOPS_BF16 = 197e12      # per chip
+HBM_BW = 819e9                # bytes/s per chip
+ICI_LINK_BW = 50e9            # bytes/s per link
+HBM_PER_CHIP = 16 * 2**30     # v5e: 16 GiB

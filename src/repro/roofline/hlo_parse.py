@@ -1,0 +1,69 @@
+"""Parse collective traffic out of post-SPMD HLO text.
+
+``cost_analysis`` does not expose collective bytes, so we sum the operand
+sizes of every all-gather / all-reduce / reduce-scatter / all-to-all /
+collective-permute in the partitioned (per-device) module.
+"""
+
+from __future__ import annotations
+
+import re
+
+COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+_DTYPE_BYTES = {
+    "f64": 8, "s64": 8, "u64": 8, "c64": 8,
+    "f32": 4, "s32": 4, "u32": 4,
+    "bf16": 2, "f16": 2, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1,
+    "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_SHAPE_RE = re.compile(r"([a-z]\w*?)\[([0-9,]*)\]")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    if dtype not in _DTYPE_BYTES:
+        return 0
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n * _DTYPE_BYTES[dtype]
+
+
+def collective_bytes(hlo_text: str) -> dict:
+    """Per-device bytes moved by each collective kind (operand sizes),
+    plus op counts.  ``{kind: {"bytes": int, "count": int}}``."""
+    out = {k: {"bytes": 0, "count": 0} for k in COLLECTIVES}
+    for line in hlo_text.splitlines():
+        for kind in COLLECTIVES:
+            token = f" {kind}("
+            idx = line.find(token)
+            if idx < 0:
+                # start variant: e.g. "all-gather-start("
+                token = f" {kind}-start("
+                idx = line.find(token)
+                if idx < 0:
+                    continue
+            # operand segment: up to the matching close paren
+            seg = line[idx + len(token):]
+            depth = 1
+            end = 0
+            for end, ch in enumerate(seg):
+                if ch == "(":
+                    depth += 1
+                elif ch == ")":
+                    depth -= 1
+                    if depth == 0:
+                        break
+            operands = seg[:end]
+            b = sum(_shape_bytes(dt, dims)
+                    for dt, dims in _SHAPE_RE.findall(operands))
+            out[kind]["bytes"] += b
+            out[kind]["count"] += 1
+            break
+    out["total_bytes"] = sum(v["bytes"] for v in out.values()
+                             if isinstance(v, dict))
+    return out

@@ -1,0 +1,127 @@
+"""Serving steps: batched prefill and single-token decode with sharded
+KV caches (sequence-slot sharding; see distributed/partition.py)."""
+
+from __future__ import annotations
+
+import contextlib
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.distributed import annotate, partition
+from repro.models import model
+from repro.models.config import ModelConfig
+
+
+def _mesh_ctx(mesh):
+    return annotate.mesh_annotations(mesh) if mesh is not None else \
+        contextlib.nullcontext()
+
+
+def serve_decode_step(params, cache, tokens, pos, enc_out=None, *,
+                      cfg: ModelConfig, mesh=None, greedy: bool = True):
+    """One new token for every sequence in the batch against a KV cache.
+    Returns (next_tokens [B,1], logits [B,1,V], cache)."""
+    with _mesh_ctx(mesh):
+        logits, cache = model.decode_step(params, cache, tokens, pos, cfg,
+                                          enc_out=enc_out)
+        nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        return nxt, logits, cache
+
+
+def serve_prefill(params, batch, *, cfg: ModelConfig, max_len: int,
+                  mesh=None):
+    with _mesh_ctx(mesh):
+        logit, cache, pos = model.prefill(params, batch, cfg, max_len)
+        nxt = jnp.argmax(logit, axis=-1)[:, None].astype(jnp.int32)
+        return nxt, cache, pos
+
+
+def abstract_params(cfg: ModelConfig, dtype=jnp.bfloat16):
+    """Serving params are bf16 (no optimizer state)."""
+    p = jax.eval_shape(lambda: model.init(jax.random.key(0), cfg))
+    return jax.tree.map(
+        lambda l: jax.ShapeDtypeStruct(
+            l.shape, dtype if l.dtype == jnp.float32 and l.ndim >= 2
+            else l.dtype), p)
+
+
+def abstract_cache(cfg: ModelConfig, batch: int, max_len: int):
+    return jax.eval_shape(
+        lambda: model.init_cache(cfg, batch, max_len, jnp.bfloat16))
+
+
+def shard_decode_step(cfg: ModelConfig, mesh, batch: int, cache_len: int, *,
+                      fsdp: bool = False):
+    """Build the jitted decode step + abstract inputs for dry-run/serving.
+
+    ``cache_len`` is the KV-cache length (the assigned decode shapes: the
+    model attends over a cache of ``seq_len`` while generating 1 token).
+    """
+    params_struct = abstract_params(cfg)
+    cache_struct = abstract_cache(cfg, batch, cache_len)
+    pspecs = partition.param_specs(params_struct, cfg, mesh, fsdp=fsdp)
+    cspecs = partition.cache_specs(cache_struct, mesh, batch)
+    bspec = partition.batch_spec(mesh, batch)
+    tok_struct = jax.ShapeDtypeStruct((batch, 1), jnp.int32)
+    pos_struct = jax.ShapeDtypeStruct((batch, 1), jnp.int32)
+    tspec = P(*(tuple(bspec) + (None,)))
+
+    enc_struct = None
+    enc_spec = None
+    if cfg.enc_dec:  # whisper: decoder cross-attends 1500 encoder frames
+        enc_struct = jax.ShapeDtypeStruct((batch, 1500, cfg.d_model),
+                                          jnp.bfloat16)
+        enc_spec = P(*(tuple(bspec) + (None, None)))
+
+    ns = lambda tree: jax.tree.map(  # noqa: E731
+        lambda s: NamedSharding(mesh, s), tree)
+    fn = jax.jit(
+        functools.partial(serve_decode_step, cfg=cfg, mesh=mesh),
+        in_shardings=(ns(pspecs), ns(cspecs), ns(tspec), ns(tspec))
+        + ((ns(enc_spec),) if cfg.enc_dec else ()),
+        out_shardings=(ns(tspec), ns(P(*(tuple(bspec) + (None, None)))),
+                       ns(cspecs)),
+        donate_argnums=(1,))
+    return fn, params_struct, cache_struct, tok_struct, pos_struct, \
+        enc_struct
+
+
+def make_prefill_batch_struct(cfg: ModelConfig, batch: int, seq: int):
+    out = {}
+    if cfg.frontend == "vision":
+        out["tokens"] = jax.ShapeDtypeStruct(
+            (batch, seq - cfg.frontend_len), jnp.int32)
+        out["patches"] = jax.ShapeDtypeStruct(
+            (batch, cfg.frontend_len, cfg.d_model), jnp.bfloat16)
+    else:
+        out["tokens"] = jax.ShapeDtypeStruct((batch, seq), jnp.int32)
+    if cfg.enc_dec:
+        out["frames"] = jax.ShapeDtypeStruct((batch, seq, cfg.d_model),
+                                             jnp.bfloat16)
+    return out
+
+
+def shard_prefill(cfg: ModelConfig, mesh, batch: int, seq: int, *,
+                  max_len: int | None = None, fsdp: bool = False):
+    max_len = max_len or seq
+    params_struct = abstract_params(cfg)
+    pspecs = partition.param_specs(params_struct, cfg, mesh, fsdp=fsdp)
+    batch_struct = make_prefill_batch_struct(cfg, batch, seq)
+    bspecs = partition.batch_specs(batch_struct, mesh)
+    cache_struct = abstract_cache(cfg, batch, max_len)
+    cspecs = partition.cache_specs(cache_struct, mesh, batch)
+    bspec = partition.batch_spec(mesh, batch)
+    tspec = P(*(tuple(bspec) + (None,)))
+
+    ns = lambda tree: jax.tree.map(  # noqa: E731
+        lambda s: NamedSharding(mesh, s), tree)
+    fn = jax.jit(
+        functools.partial(serve_prefill, cfg=cfg, max_len=max_len,
+                          mesh=mesh),
+        in_shardings=(ns(pspecs), ns(bspecs)),
+        out_shardings=(ns(tspec), ns(cspecs), ns(tspec)))
+    return fn, params_struct, batch_struct

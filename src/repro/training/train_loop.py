@@ -1,0 +1,125 @@
+"""The training driver: step loop + checkpoint/restart + failure recovery.
+
+Fault-tolerance contract:
+* checkpoints are mesh-agnostic (checkpoint/store.py) and written every
+  ``ckpt_every`` steps,
+* data is a pure function of the step index (data/tokens.py),
+* on any failure the supervisor (distributed/fault_tolerance.py) reopens
+  the store, restores the newest step -- possibly onto a *different* mesh
+  (elastic restart) -- and resumes bit-exact.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+
+import jax
+import numpy as np
+
+from repro.checkpoint.store import CheckpointStore
+from repro.data.tokens import BigramStream, make_train_batch
+from repro.distributed import partition
+from repro.models.config import ModelConfig
+from repro.training import optimizer as optim
+from repro.training import train_step as ts
+
+
+@dataclasses.dataclass
+class TrainLoopConfig:
+    steps: int = 100
+    batch: int = 8
+    seq: int = 128
+    ckpt_every: int = 20
+    keep_ckpts: int = 2
+    log_every: int = 10
+    seed: int = 0
+    fsdp: bool = True
+    opt: optim.AdamWConfig = dataclasses.field(
+        default_factory=lambda: optim.AdamWConfig(lr=1e-3, warmup_steps=20))
+
+
+@dataclasses.dataclass
+class TrainResult:
+    final_step: int
+    losses: list
+    restarts: int = 0
+
+
+class Trainer:
+    def __init__(self, cfg: ModelConfig, loop: TrainLoopConfig, mesh,
+                 ckpt_dir: str, *, fail_at_step: int | None = None):
+        self.cfg = cfg
+        self.loop = loop
+        self.mesh = mesh
+        self.ckpt_dir = ckpt_dir
+        self.stream = BigramStream(cfg.vocab, seed=loop.seed)
+        self.fail_at_step = fail_at_step
+        self.step_fn, self.state_struct, _ = ts.shard_train_step(
+            cfg, mesh, batch=loop.batch, seq=loop.seq, opt_cfg=loop.opt,
+            fsdp=loop.fsdp)
+
+    def _shardings(self):
+        pspecs = partition.param_shardings(self.state_struct.params,
+                                           self.cfg, self.mesh,
+                                           fsdp=self.loop.fsdp)
+        return ts.TrainState(
+            params=pspecs,
+            opt=optim.OptState(m=pspecs, v=pspecs,
+                               step=jax.NamedSharding(
+                                   self.mesh,
+                                   jax.sharding.PartitionSpec())))
+
+    def init_or_restore(self) -> tuple[ts.TrainState, int]:
+        store = CheckpointStore(self.ckpt_dir)
+        try:
+            steps = store.steps()
+            shardings = self._shardings()
+            if steps:
+                step = steps[-1]
+                state = store.restore(step, like=self.state_struct,
+                                      shardings=shardings)
+                return state, step
+            import functools
+            with self.mesh:
+                state = jax.jit(
+                    functools.partial(ts.init_state,
+                                      opt_cfg=self.loop.opt),
+                    static_argnums=1,
+                    out_shardings=shardings)(
+                        jax.random.key(self.loop.seed), self.cfg)
+            return state, 0
+        finally:
+            store.close()
+
+    def run(self) -> TrainResult:
+        state, start = self.init_or_restore()
+        losses = []
+        t0 = time.time()
+        for step in range(start, self.loop.steps):
+            if self.fail_at_step is not None and step == self.fail_at_step:
+                self.fail_at_step = None  # fail once
+                raise RuntimeError(f"injected failure at step {step}")
+            batch = make_train_batch(self.cfg, self.stream, step,
+                                     self.loop.batch, self.loop.seq)
+            batch = {k: jax.numpy.asarray(v) for k, v in batch.items()}
+            with self.mesh:
+                state, metrics = self.step_fn(state, batch)
+            loss = float(metrics["loss"])
+            losses.append((step, loss))
+            if step % self.loop.log_every == 0:
+                print(f"step {step:5d} loss {loss:.4f} "
+                      f"({time.time()-t0:.1f}s)", flush=True)
+            if (step + 1) % self.loop.ckpt_every == 0 or \
+                    step + 1 == self.loop.steps:
+                self._checkpoint(state, step + 1)
+        return TrainResult(final_step=self.loop.steps, losses=losses)
+
+    def _checkpoint(self, state, step):
+        store = CheckpointStore(self.ckpt_dir)
+        try:
+            store.save(step, state)
+            keep = store.steps()[-self.loop.keep_ckpts:]
+            store.gc(keep)
+        finally:
+            store.close()

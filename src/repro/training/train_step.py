@@ -1,0 +1,111 @@
+"""The jitted training step: loss -> grads -> AdamW, with sharding-aware
+construction helpers for the dry-run and the real training loop."""
+
+from __future__ import annotations
+
+import contextlib
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.distributed import annotate, partition
+from repro.models import model
+from repro.models.config import ModelConfig
+from repro.training import optimizer as opt
+
+
+class TrainState(NamedTuple):
+    params: dict
+    opt: opt.OptState
+
+
+def init_state(key, cfg: ModelConfig,
+               opt_cfg: opt.AdamWConfig | None = None) -> TrainState:
+    params = model.init(key, cfg)
+    return TrainState(params=params, opt=opt.init(params, opt_cfg))
+
+
+def abstract_state(cfg: ModelConfig,
+                   opt_cfg: opt.AdamWConfig | None = None) -> TrainState:
+    """ShapeDtypeStruct state (no allocation) for lowering/compiling."""
+    return jax.eval_shape(
+        lambda: init_state(jax.random.key(0), cfg, opt_cfg))
+
+
+def train_step(state: TrainState, batch, *, cfg: ModelConfig,
+               opt_cfg: opt.AdamWConfig, mesh=None,
+               cast_params_once: bool = True):
+    ctx = annotate.mesh_annotations(mesh) if mesh is not None else \
+        contextlib.nullcontext()
+    with ctx:
+        def loss_fn(params):
+            if cast_params_once:
+                # one bf16 working copy per step: per-use-site casts of
+                # fp32 master shards would re-run in every remat'd
+                # backward body (EXPERIMENTS.md §Perf global it.)
+                cdt = jnp.dtype(cfg.dtype)
+                params = jax.tree.map(
+                    lambda p: p.astype(cdt)
+                    if p.dtype == jnp.float32 and p.ndim >= 2 else p,
+                    params)
+            loss, parts = model.lm_loss(params, batch, cfg)
+            return loss, parts
+
+        (loss, parts), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+            state.params)
+        new_params, new_opt, om = opt.update(opt_cfg, grads, state.opt,
+                                             state.params)
+        metrics = {"loss": loss, **parts, **om}
+        return TrainState(new_params, new_opt), metrics
+
+
+def make_batch_struct(cfg: ModelConfig, batch: int, seq: int):
+    """ShapeDtypeStructs for one training batch (stub frontends supply
+    embeddings, per the assignment)."""
+    out = {}
+    if cfg.frontend == "vision":
+        out["tokens"] = jax.ShapeDtypeStruct((batch, seq - cfg.frontend_len),
+                                             jnp.int32)
+        out["patches"] = jax.ShapeDtypeStruct(
+            (batch, cfg.frontend_len, cfg.d_model), jnp.bfloat16)
+    else:
+        out["tokens"] = jax.ShapeDtypeStruct((batch, seq), jnp.int32)
+    if cfg.enc_dec:
+        out["frames"] = jax.ShapeDtypeStruct((batch, seq, cfg.d_model),
+                                             jnp.bfloat16)
+    out["labels"] = jax.ShapeDtypeStruct(out["tokens"].shape, jnp.int32)
+    return out
+
+
+def shard_train_step(cfg: ModelConfig, mesh, batch: int, seq: int,
+                     opt_cfg: opt.AdamWConfig | None = None, *,
+                     fsdp: bool = True):
+    """Build (jitted_fn, state_struct, batch_struct, shardings) for a mesh.
+
+    ``jitted_fn.lower(state, batch).compile()`` is the dry-run contract.
+    """
+    opt_cfg = opt_cfg or opt.AdamWConfig()
+    state_struct = abstract_state(cfg, opt_cfg)
+    pspecs = partition.param_specs(state_struct.params, cfg, mesh, fsdp=fsdp)
+    state_specs = TrainState(
+        params=pspecs,
+        opt=opt.OptState(m=pspecs, v=pspecs, step=P()))
+    batch_struct = make_batch_struct(cfg, batch, seq)
+    bspecs = partition.batch_specs(batch_struct, mesh)
+    out_specs = (state_specs, jax.tree.map(lambda _: P(), {
+        "loss": 0, "ce": 0, "aux": 0, "grad_norm": 0, "lr": 0}))
+
+    fn = jax.jit(
+        functools.partial(train_step, cfg=cfg, opt_cfg=opt_cfg, mesh=mesh),
+        in_shardings=(jax.tree.map(lambda s: NamedSharding(mesh, s),
+                                   state_specs),
+                      jax.tree.map(lambda s: NamedSharding(mesh, s),
+                                   bspecs)),
+        out_shardings=jax.tree.map(lambda s: NamedSharding(mesh, s),
+                                   out_specs),
+        donate_argnums=(0,))
+    return fn, state_struct, batch_struct

@@ -1,0 +1,164 @@
+"""Multi-device integration tests.
+
+These spawn a subprocess with 8 virtual host devices (the XLA device-count
+flag must be set before jax initializes, so in-process testing is
+impossible by design -- same reason dryrun.py owns its process).
+"""
+
+import os
+import subprocess
+import sys
+
+import pytest
+
+SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import sys
+sys.path.insert(0, "src")
+import jax, jax.numpy as jnp
+import numpy as np
+
+assert len(jax.devices()) == 8
+
+# ---------------------------------------------------------------- 1. sharded compaction == single-device compaction
+from repro.core import compaction, formats, offload
+from repro.core.formats import SSTGeometry, SSTImage
+
+geom = SSTGeometry(key_bytes=16, value_bytes=32, block_bytes=1024,
+                   sst_bytes=8192)
+mesh = jax.make_mesh((8,), ("data",))
+
+def entries_for_shard(s):
+    # disjoint key ranges per shard
+    items = [(b"%02d-key%04d" % (s, i), i + 1, b"v%d" % i)
+             for i in range(64)]
+    keys = np.stack([formats.pack_key_bytes(k, geom.key_bytes)
+                     for k, _, _ in items])
+    meta = np.array([(q << 1) | 1 for _, q, _ in items], np.uint32)
+    vals = np.stack([formats.pack_value_bytes(v, geom.value_bytes)
+                     for _, _, v in items])
+    return jnp.asarray(keys), jnp.asarray(meta), jnp.asarray(vals)
+
+imgs = [offload.build_image(*entries_for_shard(s), geom=geom)
+        for s in range(8)]
+img = formats.concat_images(imgs)
+img_sharded = offload.place_sharded(img, mesh, ("data",))
+out_s, stats_s = offload.sharded_compact(img_sharded, mesh, ("data",),
+                                          geom=geom, sort_mode="xla")
+# reference: per-shard single-device compaction
+for s in range(8):
+    ref_out, _ = compaction.compact(imgs[s], geom=geom, sort_mode="xla")
+    nb = imgs[s].keys.shape[0]
+    got = jax.tree.map(lambda a: np.asarray(a), out_s)
+    for f in ("keys", "meta", "vals", "shared", "nvalid", "crc", "bloom"):
+        a = getattr(got, f)[s * nb:(s + 1) * nb]
+        b = np.asarray(getattr(ref_out, f))
+        np.testing.assert_array_equal(a, b, err_msg=f)
+print("OK sharded_compact")
+
+# ---------------------------------------------------------------- 2. sharded train step runs + loss finite
+from repro.configs import get_smoke_config
+from repro.training.train_step import shard_train_step, init_state
+mesh2 = jax.make_mesh((4, 2), ("data", "model"))
+cfg = get_smoke_config("qwen3-14b").with_(
+    n_layers=2, d_model=32, n_heads=2, kv_heads=2, d_ff=64, vocab=128,
+    head_dim=16)
+fn, state_struct, batch_struct = shard_train_step(cfg, mesh2, batch=8,
+                                                  seq=32)
+from repro.distributed import partition
+from repro.training import optimizer as optim
+from repro.training.train_step import TrainState
+pspecs = partition.param_shardings(state_struct.params, cfg, mesh2)
+sh = TrainState(params=pspecs, opt=optim.OptState(
+    m=pspecs, v=pspecs,
+    step=jax.NamedSharding(mesh2, jax.sharding.PartitionSpec())))
+with mesh2:
+    state = jax.jit(init_state, static_argnums=1, out_shardings=sh)(
+        jax.random.key(0), cfg)
+batch = {"tokens": jnp.zeros((8, 32), jnp.int32),
+         "labels": jnp.zeros((8, 32), jnp.int32)}
+with mesh2:
+    state, metrics = fn(state, batch)
+assert bool(jnp.isfinite(metrics["loss"])), metrics
+print("OK sharded train step, loss", float(metrics["loss"]))
+
+# ---------------------------------------------------------------- 3. compressed gradient mean == true mean (within int8 error)
+from repro.distributed import grad_compress
+mesh3 = jax.make_mesh((8,), ("data",))
+rng = np.random.default_rng(0)
+local = rng.standard_normal((8, 512)).astype(np.float32)
+
+from jax.experimental.shard_map import shard_map
+from jax.sharding import PartitionSpec as P
+
+def one(x, e):
+    m, ne = grad_compress._compressed_mean_1d(x[0], e[0], "data", 8)
+    return m[None], ne[None]
+
+fn3 = shard_map(one, mesh=mesh3, in_specs=(P("data"), P("data")),
+                out_specs=(P("data"), P("data")), check_rep=False)
+x = jnp.asarray(local)
+err = jnp.zeros_like(x)
+m, _ = fn3(x, err)
+true_mean = local.mean(0)
+got = np.asarray(m)[0]
+rel = np.abs(got - true_mean).max() / (np.abs(true_mean).max() + 1e-9)
+assert rel < 0.05, rel
+print("OK compressed grad mean, rel err %.4f" % rel)
+
+# ---------------------------------------------------------------- 4. explicit-EP MoE == dense-global MoE (fwd + grad)
+from repro.models import moe
+from repro.distributed import annotate
+cfg_m = get_smoke_config("phi3.5-moe-42b-a6.6b").with_(
+    capacity_factor=64.0, moe_experts=4, moe_top_k=2)
+pm = moe.moe_init(jax.random.key(0), cfg_m)
+xm = jax.random.normal(jax.random.key(1), (4, 16, cfg_m.d_model),
+                       jnp.float32)
+mesh4 = jax.make_mesh((4, 2), ("data", "model"))
+yd, _ = moe._moe_ffn_dense(pm, xm, cfg_m)
+with annotate.mesh_annotations(mesh4):
+    ye, _ = jax.jit(lambda p, x: moe.moe_ffn(p, x, cfg_m))(pm, xm)
+np.testing.assert_allclose(np.asarray(ye), np.asarray(yd), rtol=2e-4,
+                           atol=2e-4)
+
+def loss_ep(p):
+    with annotate.mesh_annotations(mesh4):
+        y, _ = moe.moe_ffn(p, xm, cfg_m)
+    return (y ** 2).sum()
+
+def loss_d(p):
+    y, _ = moe._moe_ffn_dense(p, xm, cfg_m)
+    return (y ** 2).sum()
+
+ge = jax.jit(jax.grad(loss_ep))(pm)
+gd = jax.grad(loss_d)(pm)
+for kk in gd:
+    np.testing.assert_allclose(np.asarray(ge[kk]), np.asarray(gd[kk]),
+                               rtol=2e-3, atol=2e-3, err_msg=kk)
+# phantom padding: 5 experts on a 2-wide model axis
+cfg5 = cfg_m.with_(moe_experts=5)
+p5 = moe.moe_init(jax.random.key(2), cfg5)
+y5d, _ = moe._moe_ffn_dense(p5, xm, cfg5)
+with annotate.mesh_annotations(mesh4):
+    y5e, _ = jax.jit(lambda p, x: moe.moe_ffn(p, x, cfg5))(p5, xm)
+np.testing.assert_allclose(np.asarray(y5e), np.asarray(y5d), rtol=2e-4,
+                           atol=2e-4)
+print("OK EP MoE == dense MoE (fwd+grad, incl. phantom padding)")
+"""
+
+
+@pytest.mark.slow
+def test_eight_device_integration(tmp_path):
+    env = dict(os.environ)
+    env.pop("XLA_FLAGS", None)
+    script = tmp_path / "multidev.py"
+    script.write_text(SCRIPT)
+    r = subprocess.run([sys.executable, str(script)], cwd=os.getcwd(),
+                       env=env, capture_output=True, text=True,
+                       timeout=540)
+    assert r.returncode == 0, r.stdout + r.stderr
+    assert "OK sharded_compact" in r.stdout
+    assert "OK sharded train step" in r.stdout
+    assert "OK compressed grad mean" in r.stdout
+    assert "OK EP MoE == dense MoE" in r.stdout

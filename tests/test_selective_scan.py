@@ -1,0 +1,82 @@
+"""Selective-scan Pallas kernel vs naive oracle vs the model's mamba."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.selective_scan import selective_scan, selective_scan_ref
+
+
+def make_inputs(key, b, s, di, ds, dtype=jnp.float32):
+    ks = jax.random.split(jax.random.key(key), 6)
+    u = jax.random.normal(ks[0], (b, s, di), dtype)
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (b, s, di))) * 0.1
+    bb = jax.random.normal(ks[2], (b, s, ds), dtype)
+    c = jax.random.normal(ks[3], (b, s, ds), dtype)
+    a_log = jnp.log(jnp.abs(jax.random.normal(ks[4], (di, ds))) + 0.5)
+    d = jax.random.normal(ks[5], (di,))
+    return u, dt, bb, c, a_log, d
+
+
+@pytest.mark.parametrize("b,s,di,ds,dtile", [
+    (1, 16, 8, 4, 8), (2, 32, 16, 8, 8), (1, 64, 32, 16, 16),
+    (2, 24, 8, 4, 4)])
+def test_kernel_matches_oracle(b, s, di, ds, dtile):
+    args = make_inputs(b * 100 + s, b, s, di, ds)
+    y_ref, h_ref = selective_scan_ref(*args)
+    y, h = selective_scan(*args, d_tile=dtile, interpret=True)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(y_ref),
+                               rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(h), np.asarray(h_ref),
+                               rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_kernel_dtype_sweep(dtype):
+    args = make_inputs(7, 1, 32, 16, 8, dtype=dtype)
+    y_ref, _ = selective_scan_ref(*args)
+    y, _ = selective_scan(*args, d_tile=8, interpret=True)
+    tol = 1e-4 if dtype == jnp.float32 else 3e-2
+    np.testing.assert_allclose(np.asarray(y), np.asarray(y_ref),
+                               rtol=tol, atol=tol)
+
+
+def test_chunked_carry_equals_full():
+    """Host-level sequence chunking with carried h0 == one full pass."""
+    args = make_inputs(3, 1, 64, 8, 4)
+    u, dt, b, c, a_log, d = args
+    y_full, h_full = selective_scan(*args, d_tile=8, interpret=True)
+    y1, h1 = selective_scan(u[:, :32], dt[:, :32], b[:, :32], c[:, :32],
+                            a_log, d, d_tile=8, interpret=True)
+    y2, h2 = selective_scan(u[:, 32:], dt[:, 32:], b[:, 32:], c[:, 32:],
+                            a_log, d, h0=h1, d_tile=8, interpret=True)
+    np.testing.assert_allclose(
+        np.asarray(jnp.concatenate([y1, y2], axis=1)),
+        np.asarray(y_full), rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(h2), np.asarray(h_full),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_matches_model_mamba_layer():
+    """The kernel reproduces the model's mamba recurrence (same math as
+    mamba_forward's inner scan, post conv/projections)."""
+    from repro.configs import get_smoke_config
+    from repro.models import mamba as mm
+    cfg = get_smoke_config("falcon-mamba-7b").with_(ssm_chunk=64)
+    params = mm.mamba_init(jax.random.key(0), cfg)
+    x = jax.random.normal(jax.random.key(1), (2, 64, cfg.d_model))
+    want = mm.mamba_forward(params, x, cfg)
+
+    # re-derive the scan inputs exactly as mamba_forward does
+    u, z = mm._ssm_inputs(params, x, cfg)
+    u, _ = mm._causal_conv(params, u, cfg)
+    u, dt, b, c = mm._post_conv(params, u, cfg)
+    y, _ = selective_scan(u.astype(jnp.float32), dt, b, c,
+                          params["A_log"], params["D"],
+                          d_tile=cfg.d_inner, interpret=True)
+    y = y.astype(x.dtype) * jax.nn.silu(z)
+    got = jnp.einsum("bsi,id->bsd", y,
+                     params["out_proj"].astype(x.dtype))
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-2, atol=2e-2)
