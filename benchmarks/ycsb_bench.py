@@ -2,13 +2,29 @@
 
 One measured run per (engine, value_size); the contention model expands
 each measurement to the paper's {0, 40, 80}% CPU-overhead grid.
+
+``python benchmarks/ycsb_bench.py --engine device --async`` runs the
+paper's tail-latency stability comparison: the same workload against a
+synchronous store (writes stall on flush + the compaction cascade) and an
+asynchronous one (immutable-queue rotation + background flush/compaction),
+reporting p50/p99/p99.9 per-op latencies and verifying the two stores
+converge to identical contents after ``wait_idle()``.
 """
 
 from __future__ import annotations
 
+import argparse
+import os
 import shutil
+import sys
 import tempfile
 import time
+
+# runnable both as `python -m benchmarks.ycsb_bench` and as a script
+_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+for _p in (_ROOT, os.path.join(_ROOT, "src")):
+    if _p not in sys.path:
+        sys.path.insert(0, _p)
 
 from benchmarks.contention import MeasuredRun, simulate
 from repro.configs.luda_paper import bench_geometry
@@ -99,6 +115,173 @@ def sweep(records: int, operations: int, value_sizes=(128, 256, 1024),
     return rows
 
 
+def percentiles(lat_us, qs=(50.0, 99.0, 99.9)) -> dict[float, float]:
+    """{q: latency_us} from a raw latency list (nearest-rank:
+    ceil(q/100 * n)-th smallest value)."""
+    import math
+    if not lat_us:
+        return {q: 0.0 for q in qs}
+    arr = sorted(lat_us)
+    n = len(arr)
+    return {q: arr[max(0, min(n - 1, math.ceil(q / 100.0 * n) - 1))]
+            for q in qs}
+
+
+def measure_latency(engine: str, *, async_mode: bool, records: int,
+                    operations: int, value_size: int = 128, seed: int = 42,
+                    flush_workers: int = 2, path: str | None = None
+                    ) -> tuple[LsmDB, dict]:
+    """Run load + YCSB-A against one store; record every op's latency.
+
+    Returns the still-open DB (drained via ``wait_idle``) plus a report
+    with p50/p99/p99.9 split by op type.  Caller closes the DB."""
+    own_path = path is None
+    path = path or tempfile.mkdtemp(
+        prefix=f"lat-{engine}-{'async' if async_mode else 'sync'}-")
+    db = LsmDB(path, DBConfig(
+        geom=bench_geometry(value_size), engine=engine,
+        # small memtable so the default workload sizes actually rotate,
+        # flush and compact -- the stalls under comparison
+        memtable_bytes=8 * 1024,
+        scheduler=SchedulerConfig(l0_trigger=4, base_bytes=128 * 1024),
+        async_compaction=async_mode, flush_workers=flush_workers))
+    spec = WorkloadSpec.ycsb_a(records=records, operations=operations,
+                               value_size=value_size, seed=seed)
+    wl = YCSBWorkload(spec)
+    read_lat, write_lat = [], []
+    t_run0 = time.perf_counter()
+    try:
+        for ops in (wl.load_ops(), wl.run_ops()):
+            for op, key, val in ops:
+                t0 = time.perf_counter()
+                if op == "read":
+                    db.get(key)
+                else:
+                    db.put(key, val)
+                dt_us = (time.perf_counter() - t0) * 1e6
+                (read_lat if op == "read" else write_lat).append(dt_us)
+        t_ops = time.perf_counter() - t_run0
+        db.wait_idle()
+        t_drained = time.perf_counter() - t_run0
+    except BaseException:
+        try:
+            db.close()  # may itself raise after a background failure
+        except Exception:
+            pass
+        if own_path:
+            shutil.rmtree(path, ignore_errors=True)
+        raise
+    report = {
+        "engine": engine, "mode": "async" if async_mode else "sync",
+        "put_percentiles_us": percentiles(write_lat),
+        "get_percentiles_us": percentiles(read_lat),
+        "ops_per_sec": (len(read_lat) + len(write_lat)) / t_ops,
+        "drain_seconds": t_drained - t_ops,
+        "write_stalls": db.stats.write_stalls,
+        "flushes": db.stats.flushes,
+        "compactions": db.stats.compactions,
+        "path": path, "own_path": own_path, "records": records,
+    }
+    return db, report
+
+
+def _fmt_row(rep):
+    p, g = rep["put_percentiles_us"], rep["get_percentiles_us"]
+    return (f"{rep['mode']:<6} {p[50.0]:>10.1f} {p[99.0]:>10.1f} "
+            f"{p[99.9]:>10.1f} {g[50.0]:>10.1f} {g[99.0]:>10.1f} "
+            f"{rep['ops_per_sec']:>10.0f} {rep['flushes']:>5d} "
+            f"{rep['compactions']:>5d} {rep['write_stalls']:>6d}")
+
+
+def compare_sync_async(engine: str, *, records: int, operations: int,
+                       value_size: int = 128, seed: int = 42,
+                       warmup: bool = True) -> dict:
+    """The paper's Fig.-12-style stability comparison: identical workload,
+    sync vs async write path.  Verifies post-drain get() equivalence."""
+    from repro.data.ycsb import key_of
+    if warmup:
+        # populate process-level jit caches so device-engine compile time
+        # (paid once per geometry at store open on the real system) does
+        # not pollute either mode's tail
+        db, _ = measure_latency(engine, async_mode=False, records=records,
+                                operations=operations,
+                                value_size=value_size, seed=seed)
+        db.close()
+        shutil.rmtree(_["path"], ignore_errors=True)
+    db_s, rep_s = measure_latency(engine, async_mode=False, records=records,
+                                  operations=operations,
+                                  value_size=value_size, seed=seed)
+    try:
+        db_a, rep_a = measure_latency(engine, async_mode=True,
+                                      records=records,
+                                      operations=operations,
+                                      value_size=value_size, seed=seed)
+    except BaseException:
+        try:
+            db_s.close()
+        except Exception:
+            pass
+        if rep_s["own_path"]:
+            shutil.rmtree(rep_s["path"], ignore_errors=True)
+        raise
+    try:
+        mismatches = sum(
+            1 for i in range(records)
+            if db_s.get(key_of(i)) != db_a.get(key_of(i)))
+    finally:
+        for db, rep in ((db_s, rep_s), (db_a, rep_a)):
+            db.close()
+            if rep["own_path"]:
+                shutil.rmtree(rep["path"], ignore_errors=True)
+    p99_s = rep_s["put_percentiles_us"][99.0]
+    p99_a = rep_a["put_percentiles_us"][99.0]
+    header = (f"{'mode':<6} {'p50 put':>10} {'p99 put':>10} "
+              f"{'p99.9 put':>10} {'p50 get':>10} {'p99 get':>10} "
+              f"{'ops/s':>10} {'flush':>5} {'comps':>5} {'stalls':>6}")
+    print(f"engine={engine} records={records} operations={operations} "
+          f"value_size={value_size} (latencies in us)")
+    print(header)
+    print(_fmt_row(rep_s))
+    print(_fmt_row(rep_a))
+    print(f"async p99 put {p99_a:.1f}us < sync p99 put {p99_s:.1f}us: "
+          f"{p99_a < p99_s}")
+    print(f"post-drain get() equivalence over {records} keys: "
+          f"{'OK' if mismatches == 0 else f'{mismatches} MISMATCHES'}")
+    return {"sync": rep_s, "async": rep_a, "mismatches": mismatches,
+            "p99_improved": p99_a < p99_s}
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--engine", default="device", choices=["device", "cpu"])
+    ap.add_argument("--async", dest="async_mode", action="store_true",
+                    help="compare sync vs async write path")
+    ap.add_argument("--records", type=int, default=400)
+    ap.add_argument("--operations", type=int, default=800)
+    ap.add_argument("--value-size", type=int, default=128)
+    ap.add_argument("--seed", type=int, default=42)
+    ap.add_argument("--no-warmup", action="store_true")
+    args = ap.parse_args(argv)
+    if args.async_mode:
+        res = compare_sync_async(
+            args.engine, records=args.records, operations=args.operations,
+            value_size=args.value_size, seed=args.seed,
+            warmup=not args.no_warmup)
+        return 0 if (res["mismatches"] == 0 and res["p99_improved"]) else 1
+    db, rep = measure_latency(
+        args.engine, async_mode=False, records=args.records,
+        operations=args.operations, value_size=args.value_size,
+        seed=args.seed)
+    db.close()
+    shutil.rmtree(rep["path"], ignore_errors=True)
+    p, g = rep["put_percentiles_us"], rep["get_percentiles_us"]
+    print(f"engine={args.engine} mode=sync "
+          f"put p50/p99/p99.9 = {p[50.0]:.1f}/{p[99.0]:.1f}/"
+          f"{p[99.9]:.1f}us  get p50/p99 = {g[50.0]:.1f}/{g[99.0]:.1f}us  "
+          f"{rep['ops_per_sec']:.0f} ops/s")
+    return 0
+
+
 def p99_timeline(stamps, n_windows: int = 20):
     """[(t_mid, p99_us)] over the run (paper Fig. 12)."""
     if not stamps:
@@ -112,3 +295,7 @@ def p99_timeline(stamps, n_windows: int = 20):
             out.append((0.5 * (lo + hi),
                         lat[min(len(lat) - 1, int(0.99 * len(lat)))]))
     return out
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -89,6 +89,10 @@ def cooperative_sort(rows: jax.Array) -> jax.Array:
     import numpy as np
 
     def host_sort(r):
+        # materialize on the host first: indexing a jax.Array here would
+        # dispatch primitives from the callback thread, racing the main
+        # thread's dispatch (observed livelock under pytest)
+        r = np.asarray(r)
         order = np.lexsort(tuple(r[:, lane]
                                  for lane in reversed(range(r.shape[1]))))
         return np.ascontiguousarray(r[order])

@@ -1,20 +1,40 @@
 """The LSM key-value store: public API over memtable + WAL + levels +
-pluggable compaction engine (device = LUDA, cpu = LevelDB-like baseline)."""
+pluggable compaction engine (device = LUDA, cpu = LevelDB-like baseline).
+
+Write path (see docs/async.md for the diagram):
+
+    put() -> WAL append -> active memtable
+                |  (memtable full)
+                v
+        sync mode:  flush + compaction cascade inline (blocks the writer)
+        async mode: rotate the active table onto the immutable queue and
+                    return immediately; flush workers build + install L0
+                    SSTs in rotation order, and a single compaction worker
+                    drains the scheduler, reading inputs double-buffered
+                    against device work (``engine.compact_paths``).
+
+All metadata (versions, manifest, scheduler state, memtable list) is
+guarded by one RLock; version application is copy-on-write so readers can
+search a snapshot outside the lock.
+"""
 
 from __future__ import annotations
 
 import dataclasses
 import os
+import threading
 import time
 
 import numpy as np
 
 from repro.core import formats
+from repro.core.background import BackgroundExecutor, InstallSequencer
 from repro.core.formats import SSTGeometry, SSTImage
 from repro.core.scheduler import (CompactionJob, CompactionScheduler,
                                   SchedulerConfig)
 from repro.lsm import cpu_engine as ce
 from repro.lsm import memtable, sstable, wal
+from repro.lsm.memtable import ImmutableMemTable
 from repro.lsm.sstable import FileMeta, TableCache
 from repro.lsm.version import VersionEdit, VersionSet
 
@@ -31,6 +51,9 @@ class DBConfig:
     table_cache: int = 64
     sync_wal: bool = False
     auto_compact: bool = True
+    async_compaction: bool = False  # non-blocking writes + bg flush/compact
+    flush_workers: int = 1          # image builds overlap; installs ordered
+    max_pending_memtables: int = 4  # immutable-queue depth before stalling
 
 
 @dataclasses.dataclass
@@ -49,6 +72,7 @@ class DBStats:
     compact_device_seconds: float = 0.0
     flush_host_seconds: float = 0.0
     bloom_negative_skips: int = 0
+    write_stalls: int = 0
 
 
 class LsmDB:
@@ -57,18 +81,34 @@ class LsmDB:
         self.cfg = cfg or DBConfig()
         os.makedirs(path, exist_ok=True)
         self.geom = self.cfg.geom
+        self._lock = threading.RLock()
+        self._imm_cv = threading.Condition(self._lock)
         self.versions = VersionSet(path)
         self.versions.open()
         self.scheduler = CompactionScheduler(self.cfg.scheduler)
         self.scheduler.compact_pointer = dict(self.versions.compact_pointer)
         self.cache = TableCache(self.cfg.table_cache)
         self.mem = memtable.MemTable()
+        self.imm: list[ImmutableMemTable] = []
         self.stats = DBStats()
         self.engine = self._make_engine()
         self._memtable_limit = self.cfg.memtable_bytes or self.geom.sst_bytes
         self._wal_path = os.path.join(path, "wal.log")
+        self._wal_seg_no = 0
+        self._active_extra_wals: list[str] = []
         self._replay_wal()
         self._wal = wal.WALWriter(self._wal_path, sync=self.cfg.sync_wal)
+        self._async = bool(self.cfg.async_compaction)
+        self._install_seq = InstallSequencer()
+        self._compact_scheduled = False
+        self._closed = False
+        self._bg_error: BaseException | None = None
+        if self._async:
+            self._flush_exec = BackgroundExecutor(
+                workers=max(1, self.cfg.flush_workers), name="flush")
+            self._compact_exec = BackgroundExecutor(workers=1, name="compact")
+        else:
+            self._flush_exec = self._compact_exec = None
 
     def _make_engine(self):
         if self.cfg.engine == "device":
@@ -79,12 +119,22 @@ class LsmDB:
         raise ValueError(f"unknown engine {self.cfg.engine!r}")
 
     def _replay_wal(self):
-        for kind, seq, key, value in wal.replay(self._wal_path):
-            if kind == wal.PUT:
-                self.mem.put(key, seq, value)
-            else:
-                self.mem.delete(key, seq)
-            self.versions.last_seq = max(self.versions.last_seq, seq)
+        """Replay rotated WAL segments (oldest first), then the active WAL.
+        Replayed segments stay on disk until the recovered memtable
+        flushes; a crash during recovery loses nothing."""
+        import glob
+        segs = sorted(glob.glob(os.path.join(self.path, "wal-*.log")))
+        if segs:
+            self._wal_seg_no = max(
+                int(os.path.basename(p)[4:-4]) for p in segs)
+        self._active_extra_wals = list(segs)
+        for p in segs + [self._wal_path]:
+            for kind, seq, key, value in wal.replay(p):
+                if kind == wal.PUT:
+                    self.mem.put(key, seq, value)
+                else:
+                    self.mem.delete(key, seq)
+                self.versions.last_seq = max(self.versions.last_seq, seq)
 
     # ------------------------------------------------------------------
     # writes
@@ -96,28 +146,140 @@ class LsmDB:
             raise ValueError("keys must be non-empty and not end with NUL "
                              "(fixed-width key format)")
         assert len(value) <= self.geom.value_bytes - 4
-        seq = self._next_seq()
-        self._wal.append(wal.PUT, seq, key, value)
-        self.mem.put(key, seq, value)
-        self.stats.puts += 1
-        self._maybe_flush()
+        with self._lock:
+            seq = self._next_seq()
+            self._wal.append(wal.PUT, seq, key, value)
+            self.mem.put(key, seq, value)
+            self.stats.puts += 1
+            self._maybe_flush()
 
     def delete(self, key: bytes):
-        seq = self._next_seq()
-        self._wal.append(wal.DELETE, seq, key)
-        self.mem.delete(key, seq)
-        self.stats.deletes += 1
-        self._maybe_flush()
+        with self._lock:
+            seq = self._next_seq()
+            self._wal.append(wal.DELETE, seq, key)
+            self.mem.delete(key, seq)
+            self.stats.deletes += 1
+            self._maybe_flush()
 
     def _next_seq(self) -> int:
         self.versions.last_seq += 1
         return self.versions.last_seq
 
     def _maybe_flush(self):
-        if self.mem.approx_bytes >= self._memtable_limit:
+        if self.mem.approx_bytes < self._memtable_limit:
+            return
+        if self._async:
+            self._rotate_locked()
+        else:
             self.flush()
             if self.cfg.auto_compact:
                 self.maybe_compact()
+
+    def _rotate_locked(self):
+        """Move the active memtable onto the immutable queue (O(1): close +
+        rename the WAL segment) and hand it to a flush worker."""
+        # surface any earlier background-flush failure BEFORE mutating
+        # rotation state (a raise after issuing the install ticket would
+        # orphan it and wedge every later flush)
+        self._flush_exec.check()
+        if self._bg_error is not None:
+            raise IOError("writes halted: a background flush failed "
+                          f"earlier: {self._bg_error!r}")
+        while len(self.imm) >= self.cfg.max_pending_memtables:
+            self.stats.write_stalls += 1
+            if not self._imm_cv.wait(timeout=60.0):
+                raise IOError("write stalled >60s: immutable queue not "
+                              "draining (background flush dead?)")
+            if self._bg_error is not None:
+                raise IOError("writes halted: a background flush failed "
+                              f"while stalled: {self._bg_error!r}")
+        self._wal.close()
+        self._wal_seg_no += 1
+        seg = os.path.join(self.path, f"wal-{self._wal_seg_no:06d}.log")
+        os.rename(self._wal_path, seg)
+        entry = ImmutableMemTable(
+            table=self.mem,
+            wal_paths=self._active_extra_wals + [seg],
+            ticket=self._install_seq.issue())
+        self._active_extra_wals = []
+        self.imm.append(entry)
+        self.mem = memtable.MemTable()
+        self._wal = wal.WALWriter(self._wal_path, sync=self.cfg.sync_wal)
+        self._flush_exec.submit(self._background_flush, entry)
+
+    def _set_bg_error(self, err: BaseException):
+        with self._lock:
+            if self._bg_error is None:
+                self._bg_error = err
+            # wake writers stalled on a full immutable queue -- it will
+            # never drain now, and they should fail with the root cause
+            self._imm_cv.notify_all()
+
+    def _background_flush(self, entry: ImmutableMemTable):
+        t0 = time.perf_counter()
+        try:
+            entries = entry.table.sorted_entries()
+            img = None
+            if entries:
+                keys, meta, vals = self._pack_entries(entries)
+                img = self.engine.build_image(keys, meta, vals)
+        except BaseException as e:
+            # halt the flush pipeline (RocksDB-style bg_error): a younger
+            # memtable must NOT install beneath this still-queued older
+            # one, or its data would permanently shadow newer L0 data.
+            # Consume our ticket so waiters aren't wedged; the entry stays
+            # queued and readable.
+            self._set_bg_error(e)
+            self._install_seq.wait_turn(entry.ticket)
+            self._install_seq.done(entry.ticket)
+            raise
+        # installs land in rotation order: L0 reads resolve overwrites by
+        # file number, so a newer memtable must not install below an older
+        self._install_seq.wait_turn(entry.ticket)
+        try:
+            if self._bg_error is not None:
+                # an older memtable failed before our turn came: skip the
+                # install (data stays readable in the immutable queue,
+                # WAL segments stay on disk for replay in rotation order)
+                raise IOError(
+                    "flush halted: earlier background flush failed: "
+                    f"{self._bg_error!r}")
+            edit = VersionEdit()
+            if img is not None:
+                self._install_ssts(img, level=0, edit=edit)  # files on disk
+            with self._lock:
+                if img is not None:
+                    self._log_edit(edit)
+                self.imm.remove(entry)
+                self.stats.flushes += 1
+                self.stats.flush_host_seconds += time.perf_counter() - t0
+                self._imm_cv.notify_all()
+            # WAL segments die inside the sequenced region: an older
+            # memtable's segments are always unlinked before a newer
+            # one's, so a crash can never leave old WAL data that would
+            # replay over newer installed L0 data
+            for p in entry.wal_paths:
+                try:
+                    os.remove(p)
+                except FileNotFoundError:
+                    pass
+        except BaseException as e:
+            self._set_bg_error(e)
+            raise
+        finally:
+            self._install_seq.done(entry.ticket)
+        if self.cfg.auto_compact:
+            self._schedule_compaction()
+
+    def _pack_entries(self, entries):
+        keys = np.stack([formats.pack_key_bytes(k, self.geom.key_bytes)
+                         for k, _, _ in entries])
+        meta = np.array([(s << 1) | (1 if v is not None else 0)
+                         for _, s, v in entries], np.uint32)
+        vals = np.stack([formats.pack_value_bytes(v or b"",
+                                                  self.geom.value_bytes)
+                         for _, _, v in entries])
+        return keys, meta, vals
 
     # ------------------------------------------------------------------
     # reads
@@ -126,19 +288,37 @@ class LsmDB:
     def get(self, key: bytes):
         """value bytes, or None if absent / deleted."""
         self.stats.gets += 1
-        found, value = self.mem.get(key)
-        if found:
-            return value
+        err = None
+        for _ in range(8):
+            # lock-free snapshot.  Safe because writers publish in the
+            # opposite order: rotation appends to imm BEFORE swapping the
+            # active table, and flush installs the L0 version BEFORE
+            # removing from imm -- so reading mem -> imm -> version can
+            # only ever see a key twice, never lose it.
+            mems = [self.mem] + [e.table for e in reversed(list(self.imm))]
+            version = self.versions.current
+            for m in mems:
+                found, value = m.get(key)
+                if found:
+                    return value
+            try:
+                return self._search_version(version, key)
+            except FileNotFoundError as e:
+                # background compaction deleted an input under this
+                # snapshot; re-snapshot (the new version excludes it)
+                err = e
+        raise err
+
+    def _search_version(self, version, key: bytes):
         # L0: overlapping files, newest first
-        for fm in sorted(self.versions.current.levels[0],
-                         key=lambda f: -f.file_no):
+        for fm in sorted(version.levels[0], key=lambda f: -f.file_no):
             if fm.smallest <= key <= fm.largest:
                 found, value = self._table_get(fm, key)
                 if found:
                     return value
         # deeper levels: disjoint ranges
-        for level in range(1, len(self.versions.current.levels)):
-            for fm in self.versions.current.levels[level]:
+        for level in range(1, len(version.levels)):
+            for fm in version.levels[level]:
                 if fm.smallest <= key <= fm.largest:
                     found, value = self._table_get(fm, key)
                     if found:
@@ -168,55 +348,86 @@ class LsmDB:
     def scan(self, start: bytes, end: bytes):
         """[(key, value)] for start <= key < end, newest versions, no
         tombstones."""
-        best: dict[bytes, tuple[int, bytes | None]] = {}
-        for k, seq, v in self.mem.sorted_entries():
-            if start <= k < end:
-                best[k] = (seq, v)
-        for _, fm in self.versions.current.all_files():
-            if fm.largest < start or fm.smallest >= end:
-                continue
-            tbl = self.cache.get(fm, self.geom)
-            import bisect
-            lo = bisect.bisect_left(tbl.keys_bytes, start)
-            hi = bisect.bisect_left(tbl.keys_bytes, end)
-            for i in range(lo, hi):
-                k = tbl.keys_bytes[i]
-                seq = int(tbl.seqs[i])
-                if k not in best or best[k][0] < seq:
-                    v = formats.unpack_value_bytes(tbl.vals[i]) \
-                        if tbl.is_value[i] else None
-                    best[k] = (seq, v)
-        return [(k, v) for k, (_, v) in sorted(best.items())
-                if v is not None]
+        err = None
+        for _ in range(8):
+            with self._lock:
+                # only the active table's entries are copied under the
+                # lock (it mutates under concurrent puts); immutable
+                # tables are frozen and sort safely outside it
+                imm_tables = [e.table for e in self.imm]
+                active_entries = self.mem.sorted_entries()
+                version = self.versions.current
+            mem_entries = [m.sorted_entries() for m in imm_tables] + \
+                [active_entries]
+            best: dict[bytes, tuple[int, bytes | None]] = {}
+            # memtables oldest->newest so newer entries overwrite by seq
+            for entries in mem_entries:
+                for k, seq, v in entries:
+                    if start <= k < end and \
+                            (k not in best or best[k][0] < seq):
+                        best[k] = (seq, v)
+            try:
+                for _, fm in version.all_files():
+                    if fm.largest < start or fm.smallest >= end:
+                        continue
+                    tbl = self.cache.get(fm, self.geom)
+                    import bisect
+                    lo = bisect.bisect_left(tbl.keys_bytes, start)
+                    hi = bisect.bisect_left(tbl.keys_bytes, end)
+                    for i in range(lo, hi):
+                        k = tbl.keys_bytes[i]
+                        seq = int(tbl.seqs[i])
+                        if k not in best or best[k][0] < seq:
+                            v = formats.unpack_value_bytes(tbl.vals[i]) \
+                                if tbl.is_value[i] else None
+                            best[k] = (seq, v)
+                return [(k, v) for k, (_, v) in sorted(best.items())
+                        if v is not None]
+            except FileNotFoundError as e:
+                err = e
+        raise err
 
     # ------------------------------------------------------------------
     # flush + compaction
     # ------------------------------------------------------------------
 
     def flush(self):
-        if len(self.mem) == 0:
+        """Synchronously persist the active memtable (async mode: rotate it
+        and drain the flush queue)."""
+        if self._async:
+            with self._lock:
+                if len(self.mem):
+                    self._rotate_locked()
+            self._flush_exec.wait_idle()
             return
-        t0 = time.perf_counter()
-        entries = self.mem.sorted_entries()
-        keys = np.stack([formats.pack_key_bytes(k, self.geom.key_bytes)
-                         for k, _, _ in entries])
-        meta = np.array([(s << 1) | (1 if v is not None else 0)
-                         for _, s, v in entries], np.uint32)
-        vals = np.stack([formats.pack_value_bytes(v or b"",
-                                                  self.geom.value_bytes)
-                         for _, _, v in entries])
-        img = self.engine.build_image(keys, meta, vals)
-        self._install_ssts(img, level=0)
-        self.mem = memtable.MemTable()
-        self._wal.close()
-        os.remove(self._wal_path)
-        self._wal = wal.WALWriter(self._wal_path, sync=self.cfg.sync_wal)
-        self.stats.flushes += 1
-        self.stats.flush_host_seconds += time.perf_counter() - t0
+        with self._lock:
+            if len(self.mem) == 0:
+                return
+            t0 = time.perf_counter()
+            keys, meta, vals = self._pack_entries(self.mem.sorted_entries())
+            img = self.engine.build_image(keys, meta, vals)
+            self._install_ssts(img, level=0)
+            self.mem = memtable.MemTable()
+            self._wal.close()
+            for p in self._active_extra_wals + [self._wal_path]:
+                try:
+                    os.remove(p)
+                except FileNotFoundError:
+                    pass
+            self._active_extra_wals = []
+            self._wal = wal.WALWriter(self._wal_path, sync=self.cfg.sync_wal)
+            self.stats.flushes += 1
+            self.stats.flush_host_seconds += time.perf_counter() - t0
 
     def _install_ssts(self, img: SSTImage, level: int,
                       edit: VersionEdit | None = None) -> list[FileMeta]:
-        """Split a (possibly multi-SST) image into files and install."""
+        """Split a (possibly multi-SST) image into files and install.
+
+        File *writes* happen outside the DB lock (only file-number
+        allocation and the manifest log take it), so background installs
+        do not stall foreground puts/gets.  When ``edit`` is supplied the
+        caller logs it (compaction bundles deletions into the same edit).
+        """
         img = sstable.trim_image(img)
         nvalid = np.asarray(img.nvalid)
         live_blocks = max(1, int((nvalid > 0).sum()))
@@ -232,18 +443,64 @@ class LsmDB:
                 nvalid=img.nvalid[start:stop], crc=img.crc[start:stop],
                 bloom=img.bloom[start:stop]
                 if img.bloom.shape[0] == img.keys.shape[0] else img.bloom)
-            no = self.versions.new_file_no()
+            with self._lock:
+                no = self.versions.new_file_no()
             path = os.path.join(self.path, f"{no:06d}.sst")
             fm = sstable.write_sst(path, sub, no)
             edit.added.append((level, fm))
             metas.append(fm)
-        edit.last_seq = self.versions.last_seq
-        edit.next_file_no = self.versions.next_file_no
         if own_edit:
-            self.versions.log_and_apply(edit)
+            with self._lock:
+                self._log_edit(edit)
         return metas
 
+    def _log_edit(self, edit: VersionEdit):
+        """Stamp counters and make the edit durable.  Caller holds the
+        lock; files named by the edit must already be on disk."""
+        edit.last_seq = self.versions.last_seq
+        edit.next_file_no = self.versions.next_file_no
+        self.versions.log_and_apply(edit)
+
+    def _schedule_compaction(self):
+        """Enqueue the background compaction drain (at most one in flight)."""
+        with self._lock:
+            if self._compact_scheduled or self._closed:
+                return
+            self._compact_scheduled = True
+        try:
+            self._compact_exec.submit(self._background_compact)
+        except BaseException:
+            with self._lock:
+                self._compact_scheduled = False
+            raise
+
+    def _background_compact(self):
+        try:
+            while True:
+                with self._lock:
+                    job = self.scheduler.pick(self.versions.current)
+                    if job is None:
+                        self._compact_scheduled = False
+                        return
+                self.compact_job(job)
+                if self.cfg.scheduler.paper_faithful:
+                    # the paper's artifact (§IV-C): at most one job per
+                    # flush -- don't drain the scheduler
+                    with self._lock:
+                        self._compact_scheduled = False
+                    return
+        except BaseException:
+            with self._lock:
+                self._compact_scheduled = False
+            raise
+
     def maybe_compact(self):
+        if self._async:
+            # foreground compaction would race the background worker on
+            # the same job (double-installing overlapping outputs); route
+            # through the single-worker drain instead
+            self._schedule_compaction()
+            return
         if self.cfg.scheduler.paper_faithful:
             # the paper's prototype artifact (§IV-C): compaction triggers
             # only on a full L0 and pending memtable dumps are not folded
@@ -254,58 +511,119 @@ class LsmDB:
             return
         guard = 0
         while guard < 16:
-            job = self.scheduler.pick(self.versions.current)
+            with self._lock:
+                job = self.scheduler.pick(self.versions.current)
             if job is None:
                 return
             self.compact_job(job)
             guard += 1
 
     def compact_once(self) -> bool:
-        job = self.scheduler.pick(self.versions.current)
+        if self._async:
+            # side-effect-free pending check (pick() advances the
+            # round-robin pointer), then hand off to the worker
+            with self._lock:
+                v = self.versions.current
+                pending = any(
+                    self.scheduler.score(v, lvl) >= 1.0
+                    for lvl in range(len(v.levels) - 1))
+            if pending:
+                self._schedule_compaction()
+            return pending
+        with self._lock:
+            job = self.scheduler.pick(self.versions.current)
         if job is None:
             return False
         self.compact_job(job)
         return True
 
+    def _pointer_edit(self, level: int):
+        ptr = self.scheduler.compact_pointer.get(level)
+        return (level, ptr.hex()) if ptr is not None else None
+
     def compact_job(self, job: CompactionJob):
         # trivial move: single input, nothing overlapping below
         if len(job.inputs_lo) == 1 and not job.inputs_hi and job.level > 0:
             fm = job.inputs_lo[0]
-            edit = VersionEdit(added=[(job.level + 1, fm)],
-                               deleted=[(job.level, fm.file_no)])
-            self.versions.log_and_apply(edit)
-            self.stats.trivial_moves += 1
+            with self._lock:
+                edit = VersionEdit(
+                    added=[(job.level + 1, fm)],
+                    deleted=[(job.level, fm.file_no)],
+                    compact_pointer=self._pointer_edit(job.level))
+                self.versions.log_and_apply(edit)
+                self.stats.trivial_moves += 1
             return
-        images = [sstable.read_sst(f.path) for f in job.all_inputs]
-        out, es = self.engine.compact(images, bottom_level=job.bottom_level)
+        paths = [f.path for f in job.all_inputs]
+        out, es = self.engine.compact_paths(paths,
+                                            bottom_level=job.bottom_level)
+        if not es.crc_ok:
+            # durability: verify inputs BEFORE installing outputs, logging
+            # the version edit, or deleting anything -- a corrupt input
+            # must leave the store exactly as it was
+            raise IOError("compaction input failed CRC verification; "
+                          "inputs retained")
         edit = VersionEdit(
             deleted=[(job.level, f.file_no) for f in job.inputs_lo] +
-                    [(job.level + 1, f.file_no) for f in job.inputs_hi])
+                    [(job.level + 1, f.file_no) for f in job.inputs_hi],
+            compact_pointer=self._pointer_edit(job.level))
         self._install_ssts(out, level=job.level + 1, edit=edit)
-        self.versions.log_and_apply(edit)
+        with self._lock:
+            self._log_edit(edit)
+            for f in job.all_inputs:
+                self.cache.drop(f.file_no)
+            s = self.stats
+            s.compactions += 1
+            s.compact_bytes_in += es.bytes_in
+            s.compact_bytes_out += es.bytes_out
+            s.compact_entries_in += es.n_input
+            s.compact_entries_dropped += es.n_dropped
+            s.compact_host_seconds += es.host_seconds
+            s.compact_device_seconds += es.device_seconds
         for f in job.all_inputs:
-            self.cache.drop(f.file_no)
             try:
                 os.remove(f.path)
             except FileNotFoundError:
                 pass
-        s = self.stats
-        s.compactions += 1
-        s.compact_bytes_in += es.bytes_in
-        s.compact_bytes_out += es.bytes_out
-        s.compact_entries_in += es.n_input
-        s.compact_entries_dropped += es.n_dropped
-        s.compact_host_seconds += es.host_seconds
-        s.compact_device_seconds += es.device_seconds
-        if not es.crc_ok:
-            raise IOError("compaction input failed CRC verification")
 
     # ------------------------------------------------------------------
 
+    def wait_idle(self):
+        """Barrier: block until every queued flush and compaction has
+        completed (async mode).  Re-raises background errors."""
+        if not self._async:
+            return
+        while True:
+            self._flush_exec.wait_idle()
+            self._compact_exec.wait_idle()
+            with self._lock:
+                if not self.imm and not self._compact_scheduled:
+                    return
+                if self.imm and self._flush_exec.pending == 0:
+                    # a flush died earlier (its error was already raised):
+                    # the queued memtable will never drain -- say so
+                    # instead of spinning
+                    raise IOError(
+                        "immutable memtables not draining; an earlier "
+                        "background flush failed (data remains readable "
+                        "from the queued memtable)")
+
     def close(self):
-        self._wal.flush()
-        self._wal.close()
-        self.versions.close()
+        try:
+            if self._async:
+                self.wait_idle()
+        finally:
+            with self._lock:
+                self._closed = True
+            if self._async:
+                self._flush_exec.shutdown(wait=False)
+                self._compact_exec.shutdown(wait=False)
+            close_engine = getattr(self.engine, "close", None)
+            if close_engine:
+                close_engine()
+            self._wal.flush()
+            self._wal.close()
+            self.versions.close()
 
     def level_sizes(self):
-        return [len(files) for files in self.versions.current.levels]
+        with self._lock:
+            return [len(files) for files in self.versions.current.levels]

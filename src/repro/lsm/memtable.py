@@ -1,7 +1,15 @@
 """In-memory write buffer.  Newest write per key wins; tombstones are
-explicit entries so they shadow older SST data until compacted away."""
+explicit entries so they shadow older SST data until compacted away.
+
+The async write path splits the buffer into one *active* table (receiving
+writes) plus a queue of *immutable* tables awaiting background flush;
+``ImmutableMemTable`` pins a frozen table to the WAL segments that made it
+durable (deleted only after its SST lands) and to its flush ticket (L0
+installs must happen in rotation order)."""
 
 from __future__ import annotations
+
+import dataclasses
 
 
 class MemTable:
@@ -41,3 +49,11 @@ class MemTable:
     def sorted_entries(self):
         """[(key, seq, value|None)] in key order (unique keys)."""
         return [(k, s, v) for k, (s, v) in sorted(self._d.items())]
+
+
+@dataclasses.dataclass
+class ImmutableMemTable:
+    """A rotated-out memtable queued for background flush."""
+    table: MemTable
+    wal_paths: list[str]
+    ticket: int

@@ -213,21 +213,27 @@ def decode_table(img: SSTImage, geom: SSTGeometry | None = None
 
 
 class TableCache:
-    """LRU cache of decoded tables."""
+    """LRU cache of decoded tables (thread-safe: the async write path has
+    readers, flush workers and the compaction worker sharing it)."""
 
     def __init__(self, capacity: int = 64):
+        import threading
         self.capacity = capacity
         self._c: OrderedDict[int, DecodedTable] = OrderedDict()
+        self._lock = threading.Lock()
 
     def get(self, meta: FileMeta, geom: SSTGeometry) -> DecodedTable:
-        if meta.file_no in self._c:
-            self._c.move_to_end(meta.file_no)
-            return self._c[meta.file_no]
+        with self._lock:
+            if meta.file_no in self._c:
+                self._c.move_to_end(meta.file_no)
+                return self._c[meta.file_no]
         tbl = decode_table(read_sst(meta.path), geom)
-        self._c[meta.file_no] = tbl
-        if len(self._c) > self.capacity:
-            self._c.popitem(last=False)
+        with self._lock:
+            self._c[meta.file_no] = tbl
+            if len(self._c) > self.capacity:
+                self._c.popitem(last=False)
         return tbl
 
     def drop(self, file_no: int):
-        self._c.pop(file_no, None)
+        with self._lock:
+            self._c.pop(file_no, None)

@@ -83,16 +83,17 @@ class VersionSet:
                     break  # torn tail
                 self._apply_record(rec)
 
-    def _apply_record(self, rec):
+    def _apply_record(self, rec, version: Version | None = None):
+        v = version if version is not None else self.current
         kind = rec["op"]
         if kind == "add":
-            self.current.levels[rec["level"]].append(
+            v.levels[rec["level"]].append(
                 FileMeta.from_json(rec["file"]))
-            self.current.levels[rec["level"]].sort(
+            v.levels[rec["level"]].sort(
                 key=lambda f: (f.smallest, f.file_no))
         elif kind == "del":
-            lvl = self.current.levels[rec["level"]]
-            self.current.levels[rec["level"]] = \
+            lvl = v.levels[rec["level"]]
+            v.levels[rec["level"]] = \
                 [f for f in lvl if f.file_no != rec["file_no"]]
         elif kind == "meta":
             self.last_seq = max(self.last_seq, rec.get("last_seq", 0))
@@ -121,8 +122,13 @@ class VersionSet:
             self._manifest.write(json.dumps(rec) + "\n")
         self._manifest.flush()
         os.fsync(self._manifest.fileno())
+        # copy-on-write: apply to a clone, then swap.  Readers holding the
+        # old ``current`` (the async read path snapshots it outside the DB
+        # lock) see a stable level structure.
+        nxt = self.current.clone()
         for rec in recs:
-            self._apply_record(rec)
+            self._apply_record(rec, nxt)
+        self.current = nxt
 
     def new_file_no(self) -> int:
         no = self.next_file_no

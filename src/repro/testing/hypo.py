@@ -1,0 +1,128 @@
+"""Optional-import shim for ``hypothesis``.
+
+Tests import ``given``/``settings``/``strategies`` from here instead of from
+``hypothesis`` directly.  When hypothesis is installed the real thing is
+re-exported unchanged; when it is absent a tiny fixed-examples fallback
+stands in: ``@given`` draws ``max_examples`` deterministic pseudo-random
+examples from each strategy (seeded per test name), so the property tests
+still execute everywhere the tier-1 suite runs -- just without shrinking or
+adaptive search.
+"""
+
+from __future__ import annotations
+
+try:
+    from hypothesis import HealthCheck, given, settings  # noqa: F401
+    from hypothesis import strategies as st  # noqa: F401
+    HAVE_HYPOTHESIS = True
+except ModuleNotFoundError:
+    HAVE_HYPOTHESIS = False
+
+    import functools
+    import random
+    import zlib
+
+    class HealthCheck:  # type: ignore[no-redef]
+        """Attribute sink: every health check is a no-op placeholder."""
+        function_scoped_fixture = "function_scoped_fixture"
+        too_slow = "too_slow"
+        data_too_large = "data_too_large"
+        filter_too_much = "filter_too_much"
+
+    class _Strategy:
+        """A strategy is just a draw(rng) -> value function."""
+
+        def __init__(self, draw):
+            self._draw = draw
+
+        def example(self, rng: random.Random):
+            return self._draw(rng)
+
+    class _St:
+        @staticmethod
+        def integers(min_value=0, max_value=2 ** 31 - 1):
+            return _Strategy(lambda rng: rng.randint(min_value, max_value))
+
+        @staticmethod
+        def booleans():
+            return _Strategy(lambda rng: rng.random() < 0.5)
+
+        @staticmethod
+        def none():
+            return _Strategy(lambda rng: None)
+
+        @staticmethod
+        def binary(min_size=0, max_size=16):
+            return _Strategy(lambda rng: bytes(
+                rng.getrandbits(8)
+                for _ in range(rng.randint(min_size, max_size))))
+
+        @staticmethod
+        def lists(elements, min_size=0, max_size=16):
+            def draw(rng):
+                n = rng.randint(min_size, max_size)
+                return [elements.example(rng) for _ in range(n)]
+            return _Strategy(draw)
+
+        @staticmethod
+        def tuples(*parts):
+            return _Strategy(
+                lambda rng: tuple(p.example(rng) for p in parts))
+
+        @staticmethod
+        def one_of(*options):
+            return _Strategy(lambda rng: rng.choice(options).example(rng))
+
+        @staticmethod
+        def sampled_from(seq):
+            return _Strategy(lambda rng: rng.choice(list(seq)))
+
+    st = _St()  # type: ignore[assignment]
+
+    def settings(max_examples=20, **_ignored):  # type: ignore[no-redef]
+        """Record max_examples on the wrapped test; ignore the rest."""
+        def deco(fn):
+            inner = getattr(fn, "__wrapped_given__", None)
+            if inner is not None:
+                inner["max_examples"] = max_examples
+            else:
+                fn.__pending_max_examples__ = max_examples
+            return fn
+        return deco
+
+    def given(*arg_strats, **kw_strats):  # type: ignore[no-redef]
+        """Fixed-examples @given: run the test body N times with values
+        drawn from a per-test deterministic RNG.  Positional strategies
+        bind to the test's trailing parameters (after any fixtures), like
+        hypothesis does.  The wrapper advertises only the fixture
+        parameters so pytest does not try to inject the drawn ones."""
+        import inspect
+
+        def deco(fn):
+            state = {"max_examples": getattr(
+                fn, "__pending_max_examples__", 20)}
+            sig = inspect.signature(fn)
+            params = list(sig.parameters.values())
+            n_pos = len(arg_strats)
+            pos_names = [p.name for p in params[len(params) - n_pos:]] \
+                if n_pos else []
+            fixture_params = [p for p in (params[:len(params) - n_pos]
+                                          if n_pos else params)
+                              if p.name not in kw_strats]
+
+            @functools.wraps(fn)
+            def wrapper(**fixture_kw):
+                seed = zlib.crc32(fn.__qualname__.encode())
+                rng = random.Random(seed)
+                for _ in range(state["max_examples"]):
+                    call_kw = dict(fixture_kw)
+                    call_kw.update(zip(
+                        pos_names, (s.example(rng) for s in arg_strats)))
+                    call_kw.update((k, s.example(rng))
+                                   for k, s in kw_strats.items())
+                    fn(**call_kw)
+
+            wrapper.__signature__ = sig.replace(parameters=fixture_params)
+            wrapper.__wrapped_given__ = state
+            return wrapper
+        return deco

@@ -1,0 +1,293 @@
+"""Async write path: non-blocking rotation, background flush/compaction,
+wait_idle barrier, sync/async equivalence."""
+
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro.core.background import (BackgroundExecutor, InstallSequencer,
+                                   PrefetchReader)
+from repro.core.formats import SSTGeometry
+from repro.core.scheduler import SchedulerConfig
+from repro.lsm.db import DBConfig, LsmDB
+
+GEOM = SSTGeometry(key_bytes=16, value_bytes=32, block_bytes=512,
+                   sst_bytes=2048)
+
+
+def acfg(engine="cpu", **kw):
+    return DBConfig(
+        geom=GEOM, engine=engine,
+        memtable_bytes=kw.pop("memtable_bytes", 600),
+        scheduler=SchedulerConfig(l0_trigger=3, base_bytes=40_000),
+        async_compaction=kw.pop("async_compaction", True),
+        **kw)
+
+
+def apply_workload(db, n_ops=700, n_keys=120, seed=0):
+    model = {}
+    rng = np.random.default_rng(seed)
+    for i in range(n_ops):
+        k = b"key%03d" % rng.integers(0, n_keys)
+        if rng.random() < 0.15:
+            db.delete(k)
+            model.pop(k, None)
+        else:
+            v = b"v%06d" % i
+            db.put(k, v)
+            model[k] = v
+    return model
+
+
+# ---------------------------------------------------------------------------
+# background primitives
+# ---------------------------------------------------------------------------
+
+
+def test_executor_wait_idle_and_error_propagation():
+    ex = BackgroundExecutor(workers=2)
+    hits = []
+    ex.submit(hits.append, 1)
+    ex.submit(hits.append, 2)
+    ex.wait_idle()
+    assert sorted(hits) == [1, 2]
+
+    def boom():
+        raise RuntimeError("bg failure")
+    ex.submit(boom)
+    with pytest.raises(RuntimeError, match="bg failure"):
+        ex.wait_idle()
+    ex.shutdown()
+
+
+def test_install_sequencer_orders_out_of_order_workers():
+    seq = InstallSequencer()
+    t0, t1 = seq.issue(), seq.issue()
+    order = []
+
+    def late():  # holds ticket 1, must wait for ticket 0
+        seq.wait_turn(t1)
+        order.append(1)
+        seq.done(t1)
+    th = threading.Thread(target=late)
+    th.start()
+    time.sleep(0.05)
+    assert order == []          # ticket 1 blocked behind ticket 0
+    seq.wait_turn(t0)
+    order.append(0)
+    seq.done(t0)
+    th.join(timeout=5)
+    assert order == [0, 1]
+
+
+def test_prefetch_reader_preserves_order_and_errors(tmp_path):
+    paths = []
+    for i in range(5):
+        p = tmp_path / f"f{i}"
+        p.write_text(str(i))
+        paths.append(str(p))
+    r = PrefetchReader()
+    got = [open(p).read() for p in r.read_all(paths, lambda p: p)]
+    assert got == ["0", "1", "2", "3", "4"]
+    with pytest.raises(FileNotFoundError):
+        list(r.read_all([str(tmp_path / "missing")],
+                        lambda p: open(p).read()))
+    r.close()
+
+
+# ---------------------------------------------------------------------------
+# the store
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("engine", ["cpu", "device"])
+def test_async_matches_sync_contents(tmp_path, engine):
+    """Acceptance: after wait_idle, sync and async stores answer every
+    get() identically."""
+    sync_db = LsmDB(str(tmp_path / "sync"),
+                    acfg(engine, async_compaction=False))
+    async_db = LsmDB(str(tmp_path / "async"), acfg(engine, flush_workers=2))
+    model_s = apply_workload(sync_db)
+    model_a = apply_workload(async_db)
+    assert model_s == model_a
+    async_db.wait_idle()
+    assert not async_db.imm
+    for kid in range(120):
+        k = b"key%03d" % kid
+        assert async_db.get(k) == sync_db.get(k), k
+    assert async_db.stats.flushes > 1
+    assert async_db.stats.compactions + async_db.stats.trivial_moves >= 1
+    sync_db.close()
+    async_db.close()
+
+
+def test_flush_workers_preserve_rotation_order(tmp_path):
+    """Overwrites of one key span many rotated memtables; with parallel
+    flush workers the L0 installs must still land in rotation order."""
+    db = LsmDB(str(tmp_path / "db"),
+               acfg("cpu", flush_workers=3, memtable_bytes=300))
+    for i in range(400):
+        db.put(b"hot", b"v%06d" % i)       # same key every time
+        db.put(b"fill%04d" % i, b"x" * 8)  # force rotations
+    db.wait_idle()
+    assert db.get(b"hot") == b"v%06d" % 399
+    db.close()
+
+
+def test_put_does_not_block_on_flush(tmp_path):
+    """Rotation must be orders faster than the synchronous flush it
+    replaces: stall the flush worker and keep writing."""
+    db = LsmDB(str(tmp_path / "db"), acfg("cpu", memtable_bytes=300,
+                                          max_pending_memtables=64))
+    gate = threading.Event()
+    real_build = db.engine.build_image
+
+    def slow_build(*a, **kw):
+        gate.wait(timeout=30)
+        return real_build(*a, **kw)
+    db.engine.build_image = slow_build
+    t0 = time.perf_counter()
+    for i in range(120):
+        db.put(b"k%04d" % i, b"x" * 16)   # several rotations land here
+    put_wall = time.perf_counter() - t0
+    assert db.stats.write_stalls == 0
+    assert len(db.imm) >= 1               # flush is parked on the gate
+    assert put_wall < 5.0
+    for i in range(120):                  # reads see queued memtables
+        assert db.get(b"k%04d" % i) == b"x" * 16
+    gate.set()
+    db.wait_idle()
+    db.engine.build_image = real_build
+    for i in range(120):
+        assert db.get(b"k%04d" % i) == b"x" * 16
+    db.close()
+
+
+def test_write_stall_backpressure(tmp_path):
+    db = LsmDB(str(tmp_path / "db"), acfg("cpu", memtable_bytes=300,
+                                          max_pending_memtables=1))
+    slow = threading.Semaphore(0)
+    real_build = db.engine.build_image
+
+    def slow_build(*a, **kw):
+        slow.acquire(timeout=10)
+        return real_build(*a, **kw)
+    db.engine.build_image = slow_build
+    done = threading.Event()
+
+    def writer():
+        for i in range(200):
+            db.put(b"w%04d" % i, b"y" * 16)
+        done.set()
+    th = threading.Thread(target=writer)
+    th.start()
+    for _ in range(400):
+        slow.release()
+    th.join(timeout=30)
+    assert done.is_set()
+    assert db.stats.write_stalls >= 1
+    db.wait_idle()
+    db.engine.build_image = real_build
+    for i in range(200):
+        assert db.get(b"w%04d" % i) == b"y" * 16
+    db.close()
+
+
+def test_background_error_surfaces_in_wait_idle(tmp_path):
+    db = LsmDB(str(tmp_path / "db"), acfg("cpu", memtable_bytes=300))
+
+    def broken_build(*a, **kw):
+        raise RuntimeError("injected flush failure")
+    db.engine.build_image = broken_build
+    # the error surfaces on the next rotation's submit or at wait_idle,
+    # whichever comes first (background failures must not pass silently)
+    with pytest.raises(RuntimeError, match="injected flush failure"):
+        for i in range(60):
+            db.put(b"e%04d" % i, b"z" * 16)
+        db.wait_idle()
+    # the failed memtable stays queued, so its data remains readable
+    assert db.get(b"e0000") == b"z" * 16
+
+
+def test_failed_flush_halts_younger_installs_no_stale_reads(tmp_path):
+    """If an older memtable's flush fails, younger memtables must NOT
+    install to L0 beneath it -- the queued older table would permanently
+    shadow the newer durably-installed values."""
+    db = LsmDB(str(tmp_path / "db"), acfg("cpu", memtable_bytes=300,
+                                          max_pending_memtables=64))
+    real_build = db.engine.build_image
+    state = {"fail_first": True}
+
+    def flaky_build(*a, **kw):
+        if state["fail_first"]:
+            state["fail_first"] = False
+            raise RuntimeError("transient flush failure")
+        return real_build(*a, **kw)
+    db.engine.build_image = flaky_build
+    with pytest.raises((RuntimeError, IOError)):
+        db.put(b"hot", b"old")
+        for i in range(40):
+            db.put(b"f%04d" % i, b"x" * 16)   # rotation 1: fails
+        db.put(b"hot", b"new")
+        for i in range(40):
+            db.put(b"g%04d" % i, b"x" * 16)   # rotation 2: must not install
+        db.wait_idle()
+    # the newer value must win, whether it sits in imm or L0
+    assert db.get(b"hot") == b"new"
+    # nothing younger installed beneath the failed memtable
+    assert db.level_sizes()[0] == 0
+
+
+def test_async_flush_api_drains(tmp_path):
+    db = LsmDB(str(tmp_path / "db"), acfg("cpu"))
+    for i in range(40):
+        db.put(b"f%04d" % i, b"v%04d" % i)
+    db.flush()
+    assert len(db.mem) == 0 and not db.imm
+    assert db.stats.flushes >= 1
+    for i in range(40):
+        assert db.get(b"f%04d" % i) == b"v%04d" % i
+    db.close()
+
+
+def test_async_reopen_after_close(tmp_path):
+    path = str(tmp_path / "db")
+    db = LsmDB(path, acfg("cpu"))
+    model = apply_workload(db, n_ops=500)
+    db.close()
+    db2 = LsmDB(path, acfg("cpu"))
+    for kid in range(120):
+        k = b"key%03d" % kid
+        assert db2.get(k) == model.get(k), k
+    db2.close()
+
+
+def test_concurrent_readers_during_compaction(tmp_path):
+    """get() must stay correct while background flush/compaction churns
+    the version set under it."""
+    db = LsmDB(str(tmp_path / "db"), acfg("cpu", memtable_bytes=400))
+    stop = threading.Event()
+    errors = []
+
+    def reader():
+        while not stop.is_set():
+            for kid in (0, 13, 77):
+                k = b"key%03d" % kid
+                v = db.get(k)
+                if v is not None and not v.startswith(b"v"):
+                    errors.append((k, v))
+    threads = [threading.Thread(target=reader) for _ in range(2)]
+    for t in threads:
+        t.start()
+    model = apply_workload(db, n_ops=900, n_keys=90, seed=3)
+    db.wait_idle()
+    stop.set()
+    for t in threads:
+        t.join(timeout=10)
+    assert not errors
+    for kid in range(90):
+        k = b"key%03d" % kid
+        assert db.get(k) == model.get(k), k
+    db.close()

@@ -10,8 +10,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings
-from hypothesis import strategies as st
+from repro.testing.hypo import given, settings, st
 
 from repro.kernels import bitonic_sort, bloom, crc32, prefix, ref
 

@@ -2,8 +2,7 @@
 
 import numpy as np
 import pytest
-from hypothesis import HealthCheck, given, settings
-from hypothesis import strategies as st
+from repro.testing.hypo import HealthCheck, given, settings, st
 
 from repro.core.formats import SSTGeometry
 from repro.core.scheduler import SchedulerConfig
