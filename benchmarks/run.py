@@ -29,19 +29,25 @@ def main() -> None:
     ap.add_argument("--operations", type=int, default=3000)
     ap.add_argument("--quick", action="store_true",
                     help="kernel benches only")
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI smoke: 1 measurement iter per kernel")
+    ap.add_argument("--sort-mode", default="merge",
+                    choices=["merge", "device", "xla", "cooperative"],
+                    help="device-engine phase-2 mode for the YCSB sweep")
     ap.add_argument("--value-sizes", type=int, nargs="+",
                     default=[128, 256, 1024])
     args = ap.parse_args()
 
     from benchmarks.kernel_bench import bench_kernels
-    for name, us, derived in bench_kernels():
+    for name, us, derived in bench_kernels(iters=1 if args.smoke else 5):
         emit(name, us, derived)
     if args.quick:
         return
 
     from benchmarks.ycsb_bench import p99_timeline, sweep
     rows = sweep(args.records, args.operations,
-                 value_sizes=tuple(args.value_sizes))
+                 value_sizes=tuple(args.value_sizes),
+                 sort_mode=args.sort_mode)
     for r in rows:
         tag = f"{r['store']}.v{r['value_size']}.o{int(r['overhead']*100)}"
         # fig 7: throughput
@@ -61,6 +67,11 @@ def main() -> None:
                  f"bytes_out={r['compact_bytes_out']};"
                  f"compactions={r['compactions']};"
                  f"dropped={r['entries_dropped']}")
+            # where compaction time goes: phase-2 share (measured on cpu,
+            # modeled roofline share on device)
+            emit(f"ycsb.compact_sort_seconds.{r['store']}"
+                 f".v{r['value_size']}", r["compact_sort_seconds"] * 1e6,
+                 f"sort_mode={r['sort_mode']}")
             # fig 12: p99 timeline
             if r["stamps"]:
                 for t_mid, p99 in p99_timeline(r["stamps"], n_windows=10):

@@ -41,18 +41,18 @@ ENGINES = {
 
 
 def measure(engine: str, value_size: int, records: int, operations: int,
-            seed: int = 42, warmup: bool = True
+            seed: int = 42, warmup: bool = True, sort_mode: str = "merge"
             ) -> tuple[MeasuredRun, dict]:
     if warmup:
         # populate jit caches at the same workload size (device-engine
         # compile time must not count as compaction work -- on the real
         # system kernels are compiled once per geometry at store open)
         measure(engine, value_size, records, operations, seed=seed,
-                warmup=False)
+                warmup=False, sort_mode=sort_mode)
     path = tempfile.mkdtemp(prefix=f"bench-{engine}-{value_size}-")
     db = LsmDB(path, DBConfig(
         geom=bench_geometry(value_size), engine=engine,
-        memtable_bytes=64 * 1024,
+        sort_mode=sort_mode, memtable_bytes=64 * 1024,
         scheduler=SchedulerConfig(l0_trigger=4, base_bytes=512 * 1024)))
     spec = WorkloadSpec.ycsb_a(records=records, operations=operations,
                                value_size=value_size, seed=seed)
@@ -87,6 +87,8 @@ def measure(engine: str, value_size: int, records: int, operations: int,
             "compact_bytes_out": s.compact_bytes_out,
             "compactions": s.compactions,
             "entries_dropped": s.compact_entries_dropped,
+            "compact_sort_seconds": s.compact_sort_seconds,
+            "sort_mode": sort_mode if engine == "device" else "cpu",
             "stamps": stamps,
         }
         return run, extras
@@ -96,13 +98,14 @@ def measure(engine: str, value_size: int, records: int, operations: int,
 
 
 def sweep(records: int, operations: int, value_sizes=(128, 256, 1024),
-          overheads=(0.0, 0.4, 0.8)):
+          overheads=(0.0, 0.4, 0.8), sort_mode: str = "merge"):
     """Measure every (engine x value); simulate every overhead level.
     Returns rows of dicts."""
     rows = []
     for name, (engine, threads) in ENGINES.items():
         for vs in value_sizes:
-            run, extras = measure(engine, vs, records, operations)
+            run, extras = measure(engine, vs, records, operations,
+                                  sort_mode=sort_mode)
             for o in overheads:
                 sim = simulate(run, overhead=o, engine=engine,
                                threads=threads)
@@ -129,8 +132,8 @@ def percentiles(lat_us, qs=(50.0, 99.0, 99.9)) -> dict[float, float]:
 
 def measure_latency(engine: str, *, async_mode: bool, records: int,
                     operations: int, value_size: int = 128, seed: int = 42,
-                    flush_workers: int = 2, path: str | None = None
-                    ) -> tuple[LsmDB, dict]:
+                    flush_workers: int = 2, path: str | None = None,
+                    sort_mode: str = "merge") -> tuple[LsmDB, dict]:
     """Run load + YCSB-A against one store; record every op's latency.
 
     Returns the still-open DB (drained via ``wait_idle``) plus a report
@@ -140,6 +143,7 @@ def measure_latency(engine: str, *, async_mode: bool, records: int,
         prefix=f"lat-{engine}-{'async' if async_mode else 'sync'}-")
     db = LsmDB(path, DBConfig(
         geom=bench_geometry(value_size), engine=engine,
+        sort_mode=sort_mode,
         # small memtable so the default workload sizes actually rotate,
         # flush and compact -- the stalls under comparison
         memtable_bytes=8 * 1024,
@@ -195,7 +199,8 @@ def _fmt_row(rep):
 
 def compare_sync_async(engine: str, *, records: int, operations: int,
                        value_size: int = 128, seed: int = 42,
-                       warmup: bool = True) -> dict:
+                       warmup: bool = True,
+                       sort_mode: str = "merge") -> dict:
     """The paper's Fig.-12-style stability comparison: identical workload,
     sync vs async write path.  Verifies post-drain get() equivalence."""
     from repro.data.ycsb import key_of
@@ -205,17 +210,20 @@ def compare_sync_async(engine: str, *, records: int, operations: int,
         # not pollute either mode's tail
         db, _ = measure_latency(engine, async_mode=False, records=records,
                                 operations=operations,
-                                value_size=value_size, seed=seed)
+                                value_size=value_size, seed=seed,
+                                sort_mode=sort_mode)
         db.close()
         shutil.rmtree(_["path"], ignore_errors=True)
     db_s, rep_s = measure_latency(engine, async_mode=False, records=records,
                                   operations=operations,
-                                  value_size=value_size, seed=seed)
+                                  value_size=value_size, seed=seed,
+                                  sort_mode=sort_mode)
     try:
         db_a, rep_a = measure_latency(engine, async_mode=True,
                                       records=records,
                                       operations=operations,
-                                      value_size=value_size, seed=seed)
+                                      value_size=value_size, seed=seed,
+                                      sort_mode=sort_mode)
     except BaseException:
         try:
             db_s.close()
@@ -256,6 +264,10 @@ def main(argv=None):
     ap.add_argument("--engine", default="device", choices=["device", "cpu"])
     ap.add_argument("--async", dest="async_mode", action="store_true",
                     help="compare sync vs async write path")
+    ap.add_argument("--sort-mode", default="merge",
+                    choices=["merge", "device", "xla", "cooperative"],
+                    help="device-engine phase-2 mode (run-aware merge "
+                         "path vs full re-sorts)")
     ap.add_argument("--records", type=int, default=400)
     ap.add_argument("--operations", type=int, default=800)
     ap.add_argument("--value-size", type=int, default=128)
@@ -266,16 +278,16 @@ def main(argv=None):
         res = compare_sync_async(
             args.engine, records=args.records, operations=args.operations,
             value_size=args.value_size, seed=args.seed,
-            warmup=not args.no_warmup)
+            warmup=not args.no_warmup, sort_mode=args.sort_mode)
         return 0 if (res["mismatches"] == 0 and res["p99_improved"]) else 1
     db, rep = measure_latency(
         args.engine, async_mode=False, records=args.records,
         operations=args.operations, value_size=args.value_size,
-        seed=args.seed)
+        seed=args.seed, sort_mode=args.sort_mode)
     db.close()
     shutil.rmtree(rep["path"], ignore_errors=True)
     p, g = rep["put_percentiles_us"], rep["get_percentiles_us"]
-    print(f"engine={args.engine} mode=sync "
+    print(f"engine={args.engine} mode=sync sort={args.sort_mode} "
           f"put p50/p99/p99.9 = {p[50.0]:.1f}/{p[99.0]:.1f}/"
           f"{p[99.9]:.1f}us  get p50/p99 = {g[50.0]:.1f}/{g[99.0]:.1f}us  "
           f"{rep['ops_per_sec']:.0f} ops/s")

@@ -21,7 +21,8 @@ def main():
         geom=SSTGeometry(key_bytes=16, value_bytes=64, block_bytes=1024,
                          sst_bytes=8192),
         engine="device",            # <- the paper's contribution
-        sort_mode="device",         # on-device bitonic tuple sort
+        sort_mode="merge",          # run-aware merge path (phase 2);
+                                    # "device" = bitonic, "xla", "cooperative"
         memtable_bytes=2000,
         scheduler=SchedulerConfig(l0_trigger=3, base_bytes=64_000))
     db = LsmDB(path, cfg)

@@ -5,11 +5,19 @@ pipeline is one jitted function over static-shaped device arrays; the three
 phases map to the paper's CUDA kernels:
 
 * phase 1 ``unpack``     -> CRC verify (``kernels.crc32``) + prefix restore
-* phase 2 ``sort``       -> lightweight ``<K, V_offset>`` tuple sort
-                            (device bitonic / XLA sort / cooperative host)
+* phase 2 ``sort``       -> lightweight ``<K, V_offset>`` tuple ordering:
+                            run-aware merge path (default) / device bitonic
+                            / XLA sort / cooperative host
 * phase 3 ``shared_key`` -> ``kernels.prefix`` on the survivor keys
           ``encode``     -> value gather (lazy value movement) + CRC
           ``filter``     -> ``kernels.bloom``
+
+Phase 2 exploits the strongest structural fact about compaction inputs:
+every input SST is already a sorted run, so ``sort_mode="merge"`` merges
+the runs (O(n log k)) instead of re-sorting the concatenation
+(O(n log^2 n) bitonic).  Callers supply ``run_lens``, the per-input entry
+counts (see ``formats.concat_images(..., with_runs=True)``); see
+docs/compaction.md for the plumbing contract.
 
 Values are touched exactly once (the phase-3 gather): the sort operates on
 tuples whose last lane is the pair-buffer offset, which is the paper's
@@ -102,8 +110,15 @@ def cooperative_sort(rows: jax.Array) -> jax.Array:
         vmap_method="sequential")
 
 
-def sort_phase(rows: jax.Array, *, sort_mode: str,
-               backend: str = "auto") -> jax.Array:
+def sort_phase(rows: jax.Array, *, sort_mode: str, backend: str = "auto",
+               run_lens: tuple[int, ...] | None = None) -> jax.Array:
+    """Order the phase-2 tuples.  ``"merge"`` consumes ``run_lens`` (the
+    per-input-SST entry counts; each run is sorted by construction after
+    ``build_tuples`` since SST blocks are key-ordered and padding rows
+    carry the all-ones sentinel key) -- ``None`` means one sorted run.
+    The other modes ignore run structure and re-sort everything."""
+    if sort_mode == "merge":
+        return ops.merge_runs(rows, run_lens, backend=backend)
     if sort_mode == "cooperative":
         return cooperative_sort(rows)
     if sort_mode == "device":
@@ -203,14 +218,30 @@ def pack(rows: jax.Array, live: jax.Array, vals: jax.Array,
 
 
 @functools.partial(jax.jit, static_argnames=("geom", "bottom_level",
-                                             "sort_mode", "backend"))
+                                             "sort_mode", "backend",
+                                             "run_lens"))
 def compact(img: SSTImage, *, geom: SSTGeometry, bottom_level: bool = False,
-            sort_mode: str = "device",
-            backend: str = "auto") -> tuple[SSTImage, CompactionStats]:
-    """Run one full compaction over the concatenated input image."""
+            sort_mode: str = "device", backend: str = "auto",
+            run_lens: tuple[int, ...] | None = None
+            ) -> tuple[SSTImage, CompactionStats]:
+    """Run one full compaction over the concatenated input image.
+
+    ``run_lens`` (static, entries per input SST; only consumed by
+    ``sort_mode="merge"``) preserves the sorted-run structure of the
+    concatenation; it is part of the jit cache key, so callers should
+    bucket per-run sizes (see ``DeviceCompactionEngine``).  Merge mode
+    *requires* it -- the input image is normally a concatenation of runs,
+    and silently treating it as one sorted run would corrupt the output
+    (use ``formats.concat_images(..., with_runs=True)``; a genuinely
+    single-run input is ``run_lens=(n_entries,)``)."""
+    if sort_mode == "merge" and run_lens is None:
+        raise ValueError(
+            'sort_mode="merge" requires run_lens (the per-input entry '
+            "counts; see formats.concat_images(..., with_runs=True))")
     up = unpack(img, geom, backend=backend)
     rows = build_tuples(up)
-    rows_s = sort_phase(rows, sort_mode=sort_mode, backend=backend)
+    rows_s = sort_phase(rows, sort_mode=sort_mode, backend=backend,
+                        run_lens=run_lens)
     live = survivor_mask(rows_s, up.valid, geom.key_lanes,
                          bottom_level=bottom_level)
     out = pack(rows_s, live, up.vals, geom, backend=backend)

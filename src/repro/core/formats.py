@@ -170,10 +170,21 @@ def zero_prefix_lanes(keys: jax.Array, shared: jax.Array) -> jax.Array:
     return keys.astype(jnp.uint32) & mask
 
 
-def concat_images(images: list[SSTImage]) -> SSTImage:
-    """Concatenate SST images along the block axis (compaction input set)."""
-    return SSTImage(*(jnp.concatenate(parts, axis=0)
-                      for parts in zip(*images)))
+def concat_images(images: list[SSTImage], *, with_runs: bool = False):
+    """Concatenate SST images along the block axis (compaction input set).
+
+    ``with_runs=True`` additionally returns the per-input run lengths in
+    *entries* (``blocks * block_kvs`` each): every input SST is a sorted
+    run, and the run-aware merge sort path (``sort_mode="merge"``) needs
+    those boundaries -- a plain concatenation destroys them.
+    """
+    img = SSTImage(*(jnp.concatenate(parts, axis=0)
+                     for parts in zip(*images)))
+    if with_runs:
+        run_lens = tuple(im.keys.shape[0] * im.keys.shape[1]
+                         for im in images)
+        return img, run_lens
+    return img
 
 
 def entry_validity(img: SSTImage) -> jax.Array:

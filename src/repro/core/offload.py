@@ -17,6 +17,7 @@ from __future__ import annotations
 
 import dataclasses
 import functools
+import os
 
 import jax
 import jax.numpy as jnp
@@ -29,18 +30,48 @@ from repro.core.formats import SSTGeometry, SSTImage
 
 @dataclasses.dataclass
 class CompactionExecutor:
-    """Host handle for device-offloaded compactions."""
-    geom: SSTGeometry
-    sort_mode: str = "device"      # "device" | "cooperative" | "xla"
-    backend: str = "auto"          # kernel backend selection
+    """Host handle for device-offloaded compactions.
 
-    def compact(self, images: list[SSTImage], *, bottom_level: bool = False
+    ``sort_mode="merge"`` (the default) is run-aware: ``compact`` derives
+    the per-input run lengths from the image list and threads them through
+    the pipeline, so callers must pass one *sorted* image per input SST
+    (every SST written by this codebase is; see docs/compaction.md for the
+    contract).  ``debug_check_runs=True`` (or env ``REPRO_CHECK_RUNS=1``)
+    host-verifies that precondition on every job.
+    """
+    geom: SSTGeometry
+    sort_mode: str = "merge"       # "merge" | "device" | "cooperative" | "xla"
+    backend: str = "auto"          # kernel backend selection
+    debug_check_runs: bool = dataclasses.field(
+        default_factory=lambda: os.environ.get(
+            "REPRO_CHECK_RUNS", "").strip().lower()
+        in ("1", "true", "yes", "on"))
+
+    def compact(self, images: list[SSTImage], *, bottom_level: bool = False,
+                pad_blocks: int | None = None
                 ) -> tuple[SSTImage, compaction.CompactionStats]:
-        img = formats.concat_images(images)
+        """Compact the input set.  ``pad_blocks`` pads the concatenated
+        image up to a jit-stable block count; the padding becomes a
+        trailing all-sentinel run so the merge path stays exact."""
+        img, run_lens = formats.concat_images(images, with_runs=True)
+        if pad_blocks is not None:
+            img, run_lens = pad_image_blocks(img, pad_blocks, self.geom,
+                                             run_lens=run_lens)
+        if self.debug_check_runs and self.sort_mode == "merge":
+            self._check_runs(img, run_lens)
         out, stats = compaction.compact(
             img, geom=self.geom, bottom_level=bottom_level,
-            sort_mode=self.sort_mode, backend=self.backend)
+            sort_mode=self.sort_mode, backend=self.backend,
+            run_lens=run_lens if self.sort_mode == "merge" else None)
         return out, stats
+
+    def _check_runs(self, img: SSTImage, run_lens: tuple[int, ...]):
+        """Debug path: assert every input run's phase-2 tuples are sorted
+        (eager, outside the jitted pipeline)."""
+        from repro.kernels import merge_path
+        up = compaction.unpack(img, self.geom, backend=self.backend)
+        rows = compaction.build_tuples(up)
+        merge_path.assert_runs_sorted(rows, run_lens)
 
     def compact_overlapped(self, images: list[SSTImage], *,
                            bottom_level: bool = False):
@@ -90,18 +121,24 @@ def next_pow2(n: int) -> int:
     return 1 << max(0, (n - 1)).bit_length()
 
 
-def pad_image_blocks(img: SSTImage, n_blocks: int,
-                     geom: SSTGeometry) -> SSTImage:
+def pad_image_blocks(img: SSTImage, n_blocks: int, geom: SSTGeometry,
+                     run_lens: tuple[int, ...] | None = None):
     """Append empty (nvalid=0) blocks so the block count hits a jit-stable
     bucket.  Padding blocks carry the correct CRC of an all-zero wire block
-    so phase-1 verification still passes."""
+    so phase-1 verification still passes.
+
+    When ``run_lens`` (per-input entry counts) is given, returns
+    ``(padded_img, run_lens + (pad_entries,))``: the padding is appended as
+    one trailing sentinel run, keeping the merge path's sorted-run
+    precondition intact (padding tuples get the all-ones key and ascending
+    index, which is sorted by construction)."""
     import numpy as np
 
     from repro.kernels import tables
     b = img.keys.shape[0]
     extra = n_blocks - b
     if extra <= 0:
-        return img
+        return img if run_lens is None else (img, run_lens)
     zero_crc = np.uint32(
         tables.crc32_zero_message(geom.wire_words_per_block * 4))
     pad = lambda a, shape: jnp.concatenate(  # noqa: E731
@@ -110,7 +147,7 @@ def pad_image_blocks(img: SSTImage, n_blocks: int,
     bloom = img.bloom
     if bloom.shape[0] == b:  # block-granularity filters track blocks
         bloom = pad(bloom, (extra, bloom.shape[1]))
-    return SSTImage(
+    padded = SSTImage(
         keys=pad(img.keys, (extra, k, lanes)),
         meta=pad(img.meta, (extra, k)),
         vals=pad(img.vals, (extra, k, vw)),
@@ -119,6 +156,9 @@ def pad_image_blocks(img: SSTImage, n_blocks: int,
         crc=jnp.concatenate([jnp.asarray(img.crc),
                              jnp.full((extra,), zero_crc, jnp.uint32)]),
         bloom=bloom)
+    if run_lens is None:
+        return padded
+    return padded, tuple(run_lens) + (extra * k,)
 
 
 def sharded_compact(img: SSTImage, mesh: Mesh, axes, *, geom: SSTGeometry,
@@ -130,8 +170,18 @@ def sharded_compact(img: SSTImage, mesh: Mesh, axes, *, geom: SSTGeometry,
     axis (the host partitions SSTs by key range; ranges are disjoint so no
     cross-shard merge is needed -- the paper's single-device pipeline is the
     per-shard unit).  Returns the sharded output image and per-shard stats.
+
+    ``sort_mode="merge"`` is not supported here: per-shard run boundaries
+    are not representable through ``shard_map``'s uniform specs, so shards
+    re-sort (``device``/``xla``).
     """
     from jax.experimental.shard_map import shard_map
+
+    if sort_mode == "merge":
+        raise ValueError(
+            'sharded_compact does not support sort_mode="merge": per-shard '
+            "run boundaries are not representable through shard_map's "
+            'uniform specs; use "device" or "xla"')
 
     def per_shard(im: SSTImage):
         out, stats = compaction.compact(

@@ -27,8 +27,12 @@ from repro.kernels import common
 PAD_WORD = jnp.uint32(0xFFFFFFFF)
 
 
-def _bitonic_kernel(rows_ref, out_ref, *, n, lanes):
-    x = rows_ref[...]  # [n, L]
+def bitonic_network(x: jax.Array) -> jax.Array:
+    """The bitonic compare-exchange network as pure jnp: sorts ``[n, L]``
+    uint32 rows ascending over all lanes.  ``n`` must be a power of two.
+    Shared by the Pallas kernel (VMEM-resident) and the XLA-measurable
+    path ``bitonic_sort_xla`` -- O(log^2 n) full-array passes either way."""
+    n, lanes = x.shape
     log_n = n.bit_length() - 1
     for stage in range(1, log_n + 1):
         k = 1 << stage
@@ -45,7 +49,12 @@ def _bitonic_kernel(rows_ref, out_ref, *, n, lanes):
             new_a = jnp.where(swap[..., None], b, a)
             new_b = jnp.where(swap[..., None], a, b)
             x = jnp.stack([new_a, new_b], axis=1).reshape(n, lanes)
-    out_ref[...] = x
+    return x
+
+
+def _bitonic_kernel(rows_ref, out_ref, *, n, lanes):
+    del n, lanes
+    out_ref[...] = bitonic_network(rows_ref[...])
 
 
 @functools.partial(jax.jit, static_argnames=("interpret",))
@@ -74,3 +83,16 @@ def bitonic_sort(rows: jax.Array, *,
         interpret=interpret,
     )(rows.astype(jnp.uint32))
     return out[:n]
+
+
+@jax.jit
+def bitonic_sort_xla(rows: jax.Array) -> jax.Array:
+    """The same bitonic network executed directly by XLA (no Pallas) --
+    the honest CPU-measurable cost of the device bitonic path, used by
+    ``benchmarks/kernel_bench.py`` as the merge-path baseline."""
+    n, lanes = rows.shape
+    n_pad = 1 << max(1, (n - 1).bit_length())
+    if n_pad != n:
+        pad = jnp.full((n_pad - n, lanes), PAD_WORD, jnp.uint32)
+        rows = jnp.concatenate([rows.astype(jnp.uint32), pad], axis=0)
+    return bitonic_network(rows.astype(jnp.uint32))[:n]

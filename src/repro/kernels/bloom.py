@@ -78,3 +78,58 @@ def bloom_build(keys: jax.Array, valid: jax.Array, *, n_words: int,
         interpret=interpret,
     )(keys.astype(jnp.uint32), valid.astype(jnp.uint32))
     return out[:g]
+
+
+def _bloom_query_kernel(filters_ref, keys_ref, out_ref, *, n_probes,
+                        n_words):
+    filters = filters_ref[...]   # [TG, W]
+    keys = keys_ref[...]         # [TG, QC, L]
+    h1, h2 = ref.bloom_hashes(keys)  # [TG, QC]
+    m_bits = jnp.uint32(n_words * 32)
+    word_iota = jax.lax.broadcasted_iota(jnp.uint32, (1, 1, n_words), 2)
+    ok = jnp.ones(h1.shape, bool)
+    for i in range(n_probes):
+        pos = (h1 + jnp.uint32(i) * h2) % m_bits          # [TG, QC]
+        widx = (pos >> jnp.uint32(5))[..., None]          # [TG, QC, 1]
+        # gather the probed word as a compare/select/OR-reduce (the same
+        # TPU-friendly trick as the build kernel, in reverse)
+        sel = jnp.where(word_iota == widx, filters[:, None, :],
+                        jnp.uint32(0))
+        word = jax.lax.reduce(sel, np.uint32(0), jax.lax.bitwise_or, (2,))
+        bit = (word >> (pos & jnp.uint32(31))) & jnp.uint32(1)
+        ok = ok & (bit == 1)
+    out_ref[...] = ok.astype(jnp.uint32)
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "n_probes", "group_tile", "query_chunk", "interpret"))
+def bloom_query(filters: jax.Array, keys: jax.Array, *, n_probes: int,
+                group_tile: int = 4, query_chunk: int = 256,
+                interpret: bool | None = None) -> jax.Array:
+    """Membership probe on device.  ``filters``: uint32 ``[groups, W]``;
+    ``keys``: uint32 ``[groups, queries, lanes]``.  Returns bool
+    ``[groups, queries]`` (True = maybe present)."""
+    if interpret is None:
+        interpret = common.default_interpret()
+    g, q, lanes = keys.shape
+    n_words = filters.shape[-1]
+    tg = min(group_tile, g)
+    qc = min(query_chunk, q)
+    gp, qp = common.round_up(g, tg), common.round_up(q, qc)
+    if (gp, qp) != (g, q):
+        keys = jnp.pad(keys, ((0, gp - g), (0, qp - q), (0, 0)))
+    if gp != g:
+        filters = jnp.pad(filters, ((0, gp - g), (0, 0)))
+    out = pl.pallas_call(
+        functools.partial(_bloom_query_kernel, n_probes=n_probes,
+                          n_words=n_words),
+        grid=(gp // tg, qp // qc),
+        in_specs=[
+            pl.BlockSpec((tg, n_words), lambda i, j: (i, 0)),
+            pl.BlockSpec((tg, qc, lanes), lambda i, j: (i, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((tg, qc), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((gp, qp), jnp.uint32),
+        interpret=interpret,
+    )(filters.astype(jnp.uint32), keys.astype(jnp.uint32))
+    return out[:g, :q] != 0

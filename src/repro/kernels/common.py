@@ -25,3 +25,22 @@ def default_interpret() -> bool:
 
 def round_up(x: int, m: int) -> int:
     return (x + m - 1) // m * m
+
+
+def tree_merge(items: list, merge2):
+    """Pairwise merge-tree reduction: ``ceil(log2 k)`` levels of
+    ``merge2(left, right)`` over adjacent pairs, odd leftover carried to
+    the next level.  Left operands always precede right operands in the
+    original order, so a ties-to-left ``merge2`` yields a stable merge.
+    Shared by the Pallas merge-path kernel, the jnp oracle, and the CPU
+    engine's host mirror so their tree shapes cannot diverge."""
+    items = list(items)
+    if not items:
+        raise ValueError("tree_merge needs at least one item")
+    while len(items) > 1:
+        nxt = [merge2(items[i], items[i + 1])
+               for i in range(0, len(items) - 1, 2)]
+        if len(items) % 2:
+            nxt.append(items[-1])
+        items = nxt
+    return items[0]

@@ -13,10 +13,12 @@ from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.kernels import bitonic_sort as _bitonic
 from repro.kernels import bloom as _bloom
 from repro.kernels import crc32 as _crc32
+from repro.kernels import merge_path as _merge_path
 from repro.kernels import prefix as _prefix
 from repro.kernels import ref
 
@@ -62,7 +64,10 @@ def bloom_build(keys: jax.Array, valid: jax.Array | None = None, *,
 
 
 def bloom_query(filters: jax.Array, keys: jax.Array, *,
-                n_probes: int) -> jax.Array:
+                n_probes: int, backend: str = "auto") -> jax.Array:
+    """Membership probe; bool ``[groups, queries]`` (True = maybe)."""
+    if _use_pallas(backend):
+        return _bloom.bloom_query(filters, keys, n_probes=n_probes)
     return ref.bloom_query(filters, keys, n_probes=n_probes)
 
 
@@ -96,3 +101,28 @@ def sort_tuples(rows: jax.Array, num_keys: int | None = None, *,
             and num_keys == rows.shape[1]:
         return _bitonic.bitonic_sort(rows)
     return ref.sort_tuples(rows, num_keys)
+
+
+def merge_runs(rows: jax.Array, run_lens=None, *, backend: str = "auto",
+               chunk: int = 256, debug_check: bool = False) -> jax.Array:
+    """Merge ``k`` pre-sorted runs stored back to back in ``[n, L]`` rows.
+
+    ``run_lens``: per-run row counts (static ints summing to ``n``); ``None``
+    treats the whole input as one sorted run (passthrough).  Rows compare
+    lexicographically over all lanes; callers append a unique index lane,
+    which makes the result bit-identical to a stable sort of the
+    concatenation.  Unlike the bitonic path there is no single-block row
+    cap: the merge kernel streams fixed-size chunks through VMEM.
+
+    ``debug_check=True`` host-asserts the sorted-run precondition (skipped
+    under tracing, i.e. inside jit).
+    """
+    n = rows.shape[0]
+    run_lens = (n,) if run_lens is None else tuple(int(r) for r in run_lens)
+    if sum(run_lens) != n:
+        raise ValueError(f"run_lens {run_lens} must sum to {n} rows")
+    if debug_check and not isinstance(rows, jax.core.Tracer):
+        _merge_path.assert_runs_sorted(np.asarray(rows), run_lens)
+    if _use_pallas(backend):
+        return _merge_path.merge_runs(rows, run_lens, chunk=chunk)
+    return ref.merge_runs(rows, run_lens)

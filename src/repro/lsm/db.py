@@ -43,7 +43,9 @@ from repro.lsm.version import VersionEdit, VersionSet
 class DBConfig:
     geom: SSTGeometry = dataclasses.field(default_factory=SSTGeometry)
     engine: str = "device"          # "device" | "cpu"
-    sort_mode: str = "device"       # device engine phase-2 mode
+    sort_mode: str = "merge"        # device engine phase-2 mode:
+    #   "merge" (run-aware merge path) | "device" (bitonic) | "xla"
+    #   | "cooperative" (paper-faithful host sort)
     threads: int = 1                # modeled CPU compaction threads
     memtable_bytes: int | None = None
     scheduler: SchedulerConfig = dataclasses.field(
@@ -70,6 +72,7 @@ class DBStats:
     compact_entries_dropped: int = 0
     compact_host_seconds: float = 0.0
     compact_device_seconds: float = 0.0
+    compact_sort_seconds: float = 0.0   # phase-2 share (see EngineStats)
     flush_host_seconds: float = 0.0
     bloom_negative_skips: int = 0
     write_stalls: int = 0
@@ -579,6 +582,7 @@ class LsmDB:
             s.compact_entries_dropped += es.n_dropped
             s.compact_host_seconds += es.host_seconds
             s.compact_device_seconds += es.device_seconds
+            s.compact_sort_seconds += es.sort_seconds
         for f in job.all_inputs:
             try:
                 os.remove(f.path)

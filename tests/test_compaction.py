@@ -160,6 +160,87 @@ def test_compaction_matches_model_dict(ops_list):
     assert int(stats.n_live) == len(want)
 
 
+def _random_run_images(rng, sizes, key_space=300):
+    """One sorted image per run (distinct seq per entry, tombstone mix)."""
+    images, seq = [], 1
+    for n in sizes:
+        items = []
+        for _ in range(n):
+            items.append((b"k%05d" % rng.integers(0, key_space), seq,
+                          b"v%d" % seq if seq % 4 else None))
+            seq += 1
+        images.append(image_from_items(items))
+    return images
+
+
+def test_merge_mode_bit_identical_to_xla():
+    """Acceptance: sort_mode="merge" emits a bit-identical SSTImage to
+    sort_mode="xla" on randomized multi-run inputs."""
+    rng = np.random.default_rng(7)
+    images = _random_run_images(rng, (90, 17, 55))
+    img, run_lens = formats.concat_images(images, with_runs=True)
+    out_m, stats_m = compaction.compact(img, geom=GEOM, sort_mode="merge",
+                                        run_lens=run_lens)
+    out_x, stats_x = compaction.compact(img, geom=GEOM, sort_mode="xla")
+    for field, a, b in zip(out_m._fields, out_m, out_x):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b),
+                                      err_msg=f"field {field}")
+    assert int(stats_m.n_live) == int(stats_x.n_live)
+
+
+def test_merge_mode_agrees_with_all_modes():
+    rng = np.random.default_rng(8)
+    images = _random_run_images(rng, (40, 40))
+    img, run_lens = formats.concat_images(images, with_runs=True)
+    outs = [read_entries(compaction.compact(img, geom=GEOM,
+                                            sort_mode="merge",
+                                            run_lens=run_lens)[0])]
+    for mode in ("device", "xla", "cooperative"):
+        outs.append(read_entries(
+            compaction.compact(img, geom=GEOM, sort_mode=mode)[0]))
+    assert all(o == outs[0] for o in outs[1:])
+
+
+def test_executor_merge_with_padding_run():
+    """The executor carries run lengths through concat + bucket padding
+    (trailing sentinel run) and matches an xla-mode executor exactly."""
+    rng = np.random.default_rng(9)
+    images = _random_run_images(rng, (30, 12, 45))
+    ex_m = offload.CompactionExecutor(GEOM, sort_mode="merge",
+                                      debug_check_runs=True)
+    ex_x = offload.CompactionExecutor(GEOM, sort_mode="xla")
+    total = sum(im.keys.shape[0] for im in images)
+    pad_to = offload.next_pow2(total + 3)
+    out_m, _ = ex_m.compact(images, pad_blocks=pad_to)
+    out_x, _ = ex_x.compact(images, pad_blocks=pad_to)
+    for field, a, b in zip(out_m._fields, out_m, out_x):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b),
+                                      err_msg=f"field {field}")
+
+
+def test_merge_mode_requires_run_lens():
+    img = image_from_items([(b"a", 1, b"va"), (b"b", 2, b"vb")])
+    with pytest.raises(ValueError, match="run_lens"):
+        compaction.compact(img, geom=GEOM, sort_mode="merge")
+
+
+def test_executor_debug_check_catches_unsorted_run():
+    # build_image packs entries as given -- feeding it unsorted keys forges
+    # an SST that violates the sorted-run contract
+    keys = np.stack([formats.pack_key_bytes(b"k%03d" % i, GEOM.key_bytes)
+                     for i in (5, 3, 9, 1)])
+    meta = np.array([(s << 1) | 1 for s in (1, 2, 3, 4)], np.uint32)
+    vals = np.stack([formats.pack_value_bytes(b"v", GEOM.value_bytes)
+                     for _ in range(4)])
+    bad = offload.build_image(jnp.asarray(keys), jnp.asarray(meta),
+                              jnp.asarray(vals), geom=GEOM)
+    good = image_from_items([(b"a", 1, b"va"), (b"b", 2, b"vb")])
+    ex = offload.CompactionExecutor(GEOM, sort_mode="merge",
+                                    debug_check_runs=True)
+    with pytest.raises(AssertionError, match="not sorted"):
+        ex.compact([good, bad])
+
+
 def test_stats_byte_accounting():
     items = [(b"k%03d" % i, i + 1, b"v" * 8) for i in range(64)]
     img = image_from_items(items)

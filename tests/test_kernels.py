@@ -106,6 +106,26 @@ def test_bloom_pallas_matches_ref(groups, keys, lanes, n_words, n_probes):
     np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
 
 
+@pytest.mark.parametrize("groups,n_keys,queries,n_words",
+                         [(1, 32, 16, 16), (3, 100, 33, 40), (5, 64, 7, 24)])
+def test_bloom_query_pallas_matches_ref(groups, n_keys, queries, n_words):
+    rng = np.random.default_rng(groups * 100 + queries)
+    keys = jnp.asarray(rng.integers(0, 2**32, (groups, n_keys, 4),
+                                    dtype=np.uint32))
+    filt = ref.bloom_build(keys, n_words=n_words, n_probes=7)
+    probe = jnp.asarray(rng.integers(0, 2**32, (groups, queries, 4),
+                                     dtype=np.uint32))
+    want = np.asarray(ref.bloom_query(filt, probe, n_probes=7))
+    got = np.asarray(bloom.bloom_query(filt, probe, n_probes=7,
+                                       group_tile=2, query_chunk=16,
+                                       interpret=True))
+    np.testing.assert_array_equal(got, want)
+    # inserted keys must always hit through the kernel path too
+    hit = np.asarray(bloom.bloom_query(filt, keys, n_probes=7,
+                                       interpret=True))
+    assert hit.all()
+
+
 def test_bloom_no_false_negatives_and_fpr():
     rng = np.random.default_rng(7)
     n, lanes = 512, 4

@@ -1,0 +1,133 @@
+"""Tests for the run-aware merge-path phase 2 (kernel, oracle, dispatch).
+
+Ground truth is ``ref.sort_tuples`` of the concatenation: rows carry a
+unique trailing index lane, so a correct merge of sorted runs must be
+bit-identical to the stable full sort.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from repro.testing.hypo import given, settings, st
+
+from repro.kernels import merge_path, ops, ref
+
+LANES = 4  # 3 key-ish lanes + 1 unique index lane
+
+
+def make_runs(rng, lens, lanes=LANES, key_hi=64):
+    """Back-to-back sorted runs with a globally unique index lane (small
+    key space forces duplicate keys within and across runs)."""
+    runs, off = [], 0
+    for ln in lens:
+        body = rng.integers(0, key_hi, (ln, lanes - 1), dtype=np.uint32)
+        body = body[np.lexsort(body.T[::-1])]
+        idx = (np.arange(ln) + off).astype(np.uint32)
+        runs.append(np.concatenate([body, idx[:, None]], axis=1))
+        off += ln
+    if not runs:
+        return np.zeros((0, lanes), np.uint32)
+    return np.concatenate(runs)
+
+
+@pytest.mark.parametrize("lens", [(7,), (5, 9), (64, 64), (100, 3, 50),
+                                  (16, 0, 3, 32, 1), (33, 70, 20, 41)])
+def test_oracle_matches_full_sort(lens):
+    rng = np.random.default_rng(sum(lens) + len(lens))
+    rows = jnp.asarray(make_runs(rng, lens))
+    want = ref.sort_tuples(rows, LANES)
+    got = ref.merge_runs(rows, lens)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+@pytest.mark.parametrize("lens,chunk", [((5, 9), 4), ((64, 64), 16),
+                                        ((100, 3, 50), 32),
+                                        ((16, 0, 3, 32, 1), 8),
+                                        ((128, 128, 128, 128), 64)])
+def test_pallas_kernel_matches_full_sort(lens, chunk):
+    rng = np.random.default_rng(sum(lens) * 7 + chunk)
+    rows = jnp.asarray(make_runs(rng, lens))
+    want = ref.sort_tuples(rows, LANES)
+    got = merge_path.merge_runs(rows, lens, chunk=chunk, interpret=True)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_duplicate_keys_stable_via_index_lane():
+    """Rows identical in every key lane interleave across runs; the unique
+    index lane must order them exactly like the stable full sort."""
+    rng = np.random.default_rng(0)
+    rows = jnp.asarray(make_runs(rng, (40, 40, 40), key_hi=2))
+    want = ref.sort_tuples(rows, LANES)
+    for got in (ref.merge_runs(rows, (40, 40, 40)),
+                merge_path.merge_runs(rows, (40, 40, 40), chunk=16,
+                                      interpret=True)):
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_all_padding_runs_sort_last():
+    rng = np.random.default_rng(1)
+    real = make_runs(rng, (20,))
+    pad = np.full((10, LANES), 0xFFFFFFFF, np.uint32)
+    pad[:, -1] = np.arange(20, 30, dtype=np.uint32)
+    rows = jnp.asarray(np.concatenate([real, pad]))
+    want = ref.sort_tuples(rows, LANES)
+    got = merge_path.merge_runs(rows, (20, 10), chunk=8, interpret=True)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+    # the sentinel rows land at the very end
+    assert (np.asarray(got)[20:, 0] == 0xFFFFFFFF).all()
+
+
+def test_k1_passthrough():
+    rng = np.random.default_rng(2)
+    rows = jnp.asarray(make_runs(rng, (37,)))
+    got = merge_path.merge_runs(rows, (37,), chunk=8, interpret=True)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(rows))
+    got_ops = ops.merge_runs(rows, None, backend="ref")
+    np.testing.assert_array_equal(np.asarray(got_ops), np.asarray(rows))
+
+
+def test_ops_dispatch_backends_agree():
+    rng = np.random.default_rng(3)
+    rows = jnp.asarray(make_runs(rng, (30, 50, 20)))
+    want = ref.sort_tuples(rows, LANES)
+    for backend in ("ref", "pallas", "auto"):
+        got = ops.merge_runs(rows, (30, 50, 20), backend=backend, chunk=16)
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_run_lens_must_cover_rows():
+    rows = jnp.zeros((10, LANES), jnp.uint32)
+    with pytest.raises(ValueError):
+        ops.merge_runs(rows, (4, 4))
+
+
+def test_debug_check_rejects_unsorted_run():
+    rng = np.random.default_rng(4)
+    rows = make_runs(rng, (20, 10))
+    rows[[0, 5]] = rows[[5, 0]]  # break run 0
+    with pytest.raises(AssertionError, match="run 0"):
+        ops.merge_runs(jnp.asarray(rows), (20, 10), backend="ref",
+                       debug_check=True)
+    # sorted input passes the same check
+    ok = make_runs(rng, (20, 10))
+    ops.merge_runs(jnp.asarray(ok), (20, 10), backend="ref",
+                   debug_check=True)
+
+
+@given(st.integers(1, 6), st.integers(1, 40), st.integers(0, 10))
+@settings(max_examples=20, deadline=None)
+def test_merge_runs_property(k, max_len, seed):
+    rng = np.random.default_rng(seed * 1000 + k * 7 + max_len)
+    lens = tuple(int(rng.integers(0, max_len + 1)) for _ in range(k))
+    rows = jnp.asarray(make_runs(rng, lens, key_hi=8))
+    want = ref.sort_tuples(rows, LANES) if rows.shape[0] else rows
+    got = merge_path.merge_runs(rows, lens, chunk=8, interpret=True)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_rows_sorted_helper():
+    assert merge_path.rows_sorted(np.array([[0, 1], [0, 2], [1, 0]],
+                                           np.uint32))
+    assert not merge_path.rows_sorted(np.array([[1, 0], [0, 2]], np.uint32))
+    assert merge_path.rows_sorted(np.zeros((1, 3), np.uint32))
+    assert merge_path.rows_sorted(np.zeros((0, 3), np.uint32))
