@@ -1,0 +1,119 @@
+"""Bench regression gate: catch catastrophic kernel-path slowdowns in CI.
+
+Two subcommands:
+
+    python -m benchmarks.regression_gate emit current.json
+        Run the kernel microbenches in smoke mode (1 measurement iter,
+        every kernel path compiles + executes) and write the rows as JSON.
+
+    python -m benchmarks.regression_gate compare baseline.json current.json \
+        [--threshold 3.0] [--min-us 50]
+        Fail (exit 1) when any benchmark got more than ``threshold`` times
+        slower than the committed baseline, or when a baseline row
+        disappeared (lost coverage is a regression too).
+
+The threshold is deliberately generous: CI machines are noisy and slower
+than the machine that produced ``benchmarks/baseline.json``, so only
+catastrophic regressions (an accidental O(n^2) path, a kernel silently
+falling back to interpret mode, a 10x compile-per-call bug) should trip
+it.  Rows faster than ``--min-us`` in the baseline are compared against
+the ``--min-us`` floor instead, so sub-noise timings cannot flake the
+gate.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import platform
+import sys
+
+# runnable both as `python -m benchmarks.regression_gate` and as a script
+_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+for _p in (_ROOT, os.path.join(_ROOT, "src")):
+    if _p not in sys.path:
+        sys.path.insert(0, _p)
+
+
+def emit(out_path: str, iters: int = 1) -> dict:
+    from benchmarks.kernel_bench import bench_kernels
+    rows = {name: {"us": us, "derived": derived}
+            for name, us, derived in bench_kernels(iters=iters)}
+    doc = {
+        "rows": rows,
+        "meta": {
+            "iters": iters,
+            "python": platform.python_version(),
+            "machine": platform.machine(),
+        },
+    }
+    with open(out_path, "w") as f:
+        json.dump(doc, f, indent=2, sort_keys=True)
+        f.write("\n")
+    print(f"wrote {len(rows)} rows to {out_path}")
+    return doc
+
+
+def compare(baseline_path: str, current_path: str, *, threshold: float,
+            min_us: float) -> int:
+    with open(baseline_path) as f:
+        base = json.load(f)["rows"]
+    with open(current_path) as f:
+        cur = json.load(f)["rows"]
+    failures = []
+    width = max((len(n) for n in base), default=10)
+    print(f"{'benchmark':<{width}}  {'base_us':>10}  {'cur_us':>10}  "
+          f"{'ratio':>6}  verdict")
+    for name in sorted(base):
+        b = float(base[name]["us"])
+        if name not in cur:
+            failures.append(f"{name}: present in baseline, missing from "
+                            "current run (lost bench coverage)")
+            print(f"{name:<{width}}  {b:>10.1f}  {'MISSING':>10}")
+            continue
+        c = float(cur[name]["us"])
+        floor = max(b, min_us)
+        ratio = c / floor
+        ok = ratio <= threshold
+        print(f"{name:<{width}}  {b:>10.1f}  {c:>10.1f}  {ratio:>6.2f}  "
+              f"{'ok' if ok else 'FAIL'}")
+        if not ok:
+            failures.append(
+                f"{name}: {c:.1f}us vs baseline {b:.1f}us "
+                f"({ratio:.1f}x > {threshold:.1f}x threshold)")
+    extra = sorted(set(cur) - set(base))
+    if extra:
+        print(f"note: {len(extra)} rows not in baseline (new benches?): "
+              + ", ".join(extra))
+    if failures:
+        print(f"\nREGRESSION GATE FAILED ({len(failures)}):",
+              file=sys.stderr)
+        for msg in failures:
+            print(f"  - {msg}", file=sys.stderr)
+        return 1
+    print("\nregression gate passed")
+    return 0
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    sub = ap.add_subparsers(dest="cmd", required=True)
+    ap_e = sub.add_parser("emit", help="run smoke benches, write JSON")
+    ap_e.add_argument("out")
+    ap_e.add_argument("--iters", type=int, default=1)
+    ap_c = sub.add_parser("compare", help="compare current vs baseline")
+    ap_c.add_argument("baseline")
+    ap_c.add_argument("current")
+    ap_c.add_argument("--threshold", type=float, default=3.0)
+    ap_c.add_argument("--min-us", type=float, default=50.0)
+    args = ap.parse_args(argv)
+    if args.cmd == "emit":
+        emit(args.out, iters=args.iters)
+        return 0
+    return compare(args.baseline, args.current, threshold=args.threshold,
+                   min_us=args.min_us)
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -189,6 +189,98 @@ def measure_latency(engine: str, *, async_mode: bool, records: int,
     return db, report
 
 
+def measure_sharded(engine: str, *, shards: int, records: int,
+                    operations: int, value_size: int = 128, seed: int = 42,
+                    async_mode: bool = False, sort_mode: str = "merge"
+                    ) -> dict:
+    """Multi-tenant mode: one ``ShardedDB`` with a learned boundary table,
+    per-op latencies tagged by owning shard.
+
+    Reports aggregate p50/p99 + per-shard p99 (tail fairness across
+    tenants) and the batched-compaction counters -- the cross-shard
+    ``compact_many`` coalescing is the thing under measurement."""
+    from repro.data.ycsb import key_of
+    from repro.lsm.sharded import ShardedDB
+    path = tempfile.mkdtemp(prefix=f"shard-{engine}-{shards}-")
+    # YCSB keys live in a thin slice of byte space: learn the boundary
+    # table from a uniform sample of the key population
+    sample = [key_of(i) for i in range(0, records,
+                                       max(1, records // 1024))]
+    db = ShardedDB(path, DBConfig(
+        geom=bench_geometry(value_size), engine=engine,
+        sort_mode=sort_mode, memtable_bytes=16 * 1024,
+        scheduler=SchedulerConfig(l0_trigger=4, base_bytes=256 * 1024),
+        async_compaction=async_mode),
+        shards=shards, sample_keys=sample)
+    spec = WorkloadSpec.ycsb_a(records=records, operations=operations,
+                               value_size=value_size, seed=seed)
+    wl = YCSBWorkload(spec)
+    shard_lat: list[list[float]] = [[] for _ in range(db.n_shards)]
+    all_lat: list[float] = []
+    t0_run = time.perf_counter()
+    try:
+        for ops in (wl.load_ops(), wl.run_ops()):
+            for op, key, val in ops:
+                t0 = time.perf_counter()
+                if op == "read":
+                    db.get(key)
+                else:
+                    db.put(key, val)
+                dt_us = (time.perf_counter() - t0) * 1e6
+                shard_lat[db.shard_of(key)].append(dt_us)
+                all_lat.append(dt_us)
+        t_ops = time.perf_counter() - t0_run
+        db.flush()
+        db.maybe_compact()
+        db.wait_idle()
+        s = db.stats
+        eng = db.engine
+        report = {
+            "engine": engine, "shards": db.n_shards,
+            "mode": "async" if async_mode else "sync",
+            "ops_per_sec": len(all_lat) / t_ops,
+            "aggregate_percentiles_us": percentiles(all_lat),
+            "per_shard_p99_us": [percentiles(lat)[99.0]
+                                 for lat in shard_lat],
+            "per_shard_ops": [len(lat) for lat in shard_lat],
+            "flushes": s.flushes, "compactions": s.compactions,
+            "batched_compactions": s.batched_compactions,
+            "batch_launches": getattr(eng, "batch_launches", 0),
+            "batch_jobs": getattr(eng, "batch_jobs", 0),
+            "max_batch_jobs": getattr(eng, "max_batch_jobs", 0),
+        }
+    except BaseException:
+        try:
+            db.close()   # may re-raise after a background failure --
+        except Exception:   # don't mask the original traceback
+            pass
+        shutil.rmtree(path, ignore_errors=True)
+        raise
+    # success path: a close() failure (late background error) must
+    # surface, but the temp dir dies either way
+    try:
+        db.close()
+    finally:
+        shutil.rmtree(path, ignore_errors=True)
+    return report
+
+
+def _print_sharded(rep):
+    agg = rep["aggregate_percentiles_us"]
+    print(f"engine={rep['engine']} shards={rep['shards']} "
+          f"mode={rep['mode']}  {rep['ops_per_sec']:.0f} ops/s  "
+          f"aggregate p50/p99/p99.9 = {agg[50.0]:.1f}/{agg[99.0]:.1f}/"
+          f"{agg[99.9]:.1f}us")
+    for i, (p99, n) in enumerate(zip(rep["per_shard_p99_us"],
+                                     rep["per_shard_ops"])):
+        print(f"  shard {i}: {n:>7d} ops  p99 {p99:>10.1f}us")
+    print(f"  compactions={rep['compactions']} "
+          f"batched={rep['batched_compactions']} "
+          f"launches={rep['batch_launches']} "
+          f"(jobs={rep['batch_jobs']}, max/launch="
+          f"{rep['max_batch_jobs']})")
+
+
 def _fmt_row(rep):
     p, g = rep["put_percentiles_us"], rep["get_percentiles_us"]
     return (f"{rep['mode']:<6} {p[50.0]:>10.1f} {p[99.0]:>10.1f} "
@@ -268,12 +360,24 @@ def main(argv=None):
                     choices=["merge", "device", "xla", "cooperative"],
                     help="device-engine phase-2 mode (run-aware merge "
                          "path vs full re-sorts)")
+    ap.add_argument("--shards", type=int, default=0,
+                    help="multi-tenant mode: run a ShardedDB with N "
+                         "range shards sharing one batching compaction "
+                         "backend; reports aggregate + per-shard p99")
     ap.add_argument("--records", type=int, default=400)
     ap.add_argument("--operations", type=int, default=800)
     ap.add_argument("--value-size", type=int, default=128)
     ap.add_argument("--seed", type=int, default=42)
     ap.add_argument("--no-warmup", action="store_true")
     args = ap.parse_args(argv)
+    if args.shards > 0:
+        rep = measure_sharded(
+            args.engine, shards=args.shards, records=args.records,
+            operations=args.operations, value_size=args.value_size,
+            seed=args.seed, async_mode=args.async_mode,
+            sort_mode=args.sort_mode)
+        _print_sharded(rep)
+        return 0
     if args.async_mode:
         res = compare_sync_async(
             args.engine, records=args.records, operations=args.operations,

@@ -20,6 +20,13 @@ from repro.configs.whisper_medium import CONFIG as WHISPER_MEDIUM
 from repro.configs.yi_34b import CONFIG as YI_34B
 from repro.models.config import ModelConfig
 
+# re-exported for the registry (repro.configs.registry reads these)
+__all__ = [
+    "FALCON_MAMBA_7B", "GEMMA3_4B", "GRANITE_20B", "GRANITE_MOE_3B",
+    "INTERNVL2_26B", "JAMBA_1_5_LARGE", "PHI35_MOE", "QWEN3_14B",
+    "WHISPER_MEDIUM", "YI_34B", "SMOKE_OVERRIDES",
+]
+
 
 def _smoke(cfg: ModelConfig, **extra) -> ModelConfig:
     kw = dict(

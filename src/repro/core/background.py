@@ -136,6 +136,128 @@ class InstallSequencer:
             self._cv.notify_all()
 
 
+class GlobalCompactionQueue:
+    """Cross-shard compaction coordinator (the ``ShardedDB`` backend).
+
+    Shards publish "I have compaction work" notifications
+    (``LsmDB(compaction_sink=queue.notify)``); a single worker drains the
+    queue in rounds: each round picks at most ONE job per pending shard
+    (jobs within a shard are ordered -- installing one changes what the
+    next should be -- but jobs from *different* shards are independent)
+    and hands the whole round to ``engine.compact_many``, which coalesces
+    same-shape-bucket jobs into single stacked device launches.  Installs
+    then run per shard in pick order, so each shard's version history is
+    exactly what sequential compaction would have produced.
+
+    A failed install (e.g. a CRC verdict) is isolated to its shard: the
+    other jobs in the round still install, and the first error is
+    re-raised through the executor (surfaces on ``wait_idle``/``close``).
+    """
+
+    def __init__(self, engine):
+        self.engine = engine
+        self._lock = threading.Lock()
+        self._pending: dict[int, object] = {}   # id(db) -> db
+        self._scheduled = False
+        self._closed = False
+        self._exec = BackgroundExecutor(workers=1, name="shard-compact")
+        # accounting for benchmarks/tests
+        self.rounds = 0
+        self.jobs_run = 0
+        self.trivial_moves = 0
+
+    def notify(self, db):
+        """Mark ``db`` as having (potential) compaction work and make sure
+        the drain worker is running.  Callable as a ``compaction_sink``."""
+        with self._lock:
+            if self._closed:
+                return
+            self._pending[id(db)] = db
+            if self._scheduled:
+                return
+            self._scheduled = True
+        try:
+            self._exec.submit(self._drain)
+        except BaseException:
+            with self._lock:
+                self._scheduled = False
+            raise
+
+    def _drain(self):
+        try:
+            while True:
+                with self._lock:
+                    dbs = list(self._pending.values())
+                    self._pending.clear()
+                    if not dbs:
+                        self._scheduled = False
+                        return
+                self._drain_round(dbs)
+        except BaseException:
+            with self._lock:
+                self._scheduled = False
+            raise
+
+    def _drain_round(self, dbs):
+        """Pick <=1 real job per shard, batch-compact, install per shard.
+        Shards that yielded a job are re-queued (they may have more)."""
+        owners, jobs = [], []
+        for db in dbs:
+            job = db.pick_compaction()
+            # trivial moves are metadata-only: apply inline and re-pick
+            # (bounded -- each move strictly shrinks the source level)
+            guard = 0
+            while job is not None and db.is_trivial_move(job) and guard < 64:
+                db.apply_trivial_move(job)
+                self.trivial_moves += 1
+                job = db.pick_compaction()
+                guard += 1
+            if job is not None:
+                owners.append((db, job))
+                jobs.append(([f.path for f in job.all_inputs],
+                             job.bottom_level))
+        if not jobs:
+            return
+        self.rounds += 1
+        self.jobs_run += len(jobs)
+        results = self.engine.compact_many(jobs)
+        err = None
+        for (db, job), (out, es) in zip(owners, results):
+            try:
+                db.apply_compaction(job, out, es)
+            except BaseException as e:  # noqa: BLE001 - isolated per shard
+                if err is None:
+                    err = e
+            with self._lock:
+                if not self._closed:
+                    self._pending[id(db)] = db
+        if err is not None:
+            raise err
+
+    def wait_idle(self):
+        """Barrier: returns once no shard has pending compaction work.
+        Re-raises the first background error."""
+        while True:
+            self._exec.wait_idle()
+            resubmit = False
+            with self._lock:
+                if not self._pending and not self._scheduled:
+                    return
+                if not self._scheduled:
+                    # a previous drain died with work still queued (its
+                    # error already surfaced above); restart it
+                    self._scheduled = True
+                    resubmit = True
+            if resubmit:
+                self._exec.submit(self._drain)
+
+    def close(self):
+        with self._lock:
+            self._closed = True
+            self._pending.clear()
+        self._exec.shutdown(wait=False)
+
+
 class PrefetchReader:
     """Single I/O thread that reads files one step ahead of the consumer.
 

@@ -73,6 +73,51 @@ class CompactionExecutor:
         rows = compaction.build_tuples(up)
         merge_path.assert_runs_sorted(rows, run_lens)
 
+    def compact_many(self, jobs: list[list[SSTImage]], *,
+                     bottom_level: bool = False,
+                     pad_blocks: int | None = None
+                     ) -> list[tuple[SSTImage, compaction.CompactionStats]]:
+        """Compact several *same-shape* jobs in one stacked device launch.
+
+        Every job is one input image list; after per-job concatenation
+        (+ optional padding to ``pad_blocks``) all jobs must present
+        identical array shapes and -- in merge mode -- identical run
+        signatures, since ``run_lens`` is static for the whole batch
+        (callers group jobs by shape bucket first; see
+        ``DeviceCompactionEngine.compact_many``).  Returns per-job
+        ``(image, stats)`` in input order, bit-identical to calling
+        ``compact`` on each job alone: ``vmap`` runs the same integer
+        pipeline per batch lane."""
+        assert jobs, "compact_many needs at least one job"
+        imgs, sigs = [], []
+        for images in jobs:
+            img, run_lens = formats.concat_images(images, with_runs=True)
+            if pad_blocks is not None:
+                img, run_lens = pad_image_blocks(img, pad_blocks, self.geom,
+                                                 run_lens=run_lens)
+            if self.debug_check_runs and self.sort_mode == "merge":
+                self._check_runs(img, run_lens)
+            imgs.append(img)
+            sigs.append(tuple(run_lens))
+        if self.sort_mode == "merge" and any(s != sigs[0] for s in sigs):
+            raise ValueError(
+                f"compact_many jobs have mismatched run signatures {sigs}; "
+                "group jobs by shape bucket before batching")
+        if any(im.keys.shape != imgs[0].keys.shape for im in imgs):
+            raise ValueError(
+                "compact_many jobs have mismatched block counts "
+                f"{[im.keys.shape[0] for im in imgs]}; pass pad_blocks or "
+                "group jobs by shape bucket before batching")
+        stacked = SSTImage(*(jnp.stack(parts, axis=0)
+                             for parts in zip(*imgs)))
+        out, stats = compact_batch(
+            stacked, geom=self.geom, bottom_level=bottom_level,
+            sort_mode=self.sort_mode, backend=self.backend,
+            run_lens=sigs[0] if self.sort_mode == "merge" else None)
+        return [(SSTImage(*(a[j] for a in out)),
+                 compaction.CompactionStats(*(s[j] for s in stats)))
+                for j in range(len(jobs))]
+
     def compact_overlapped(self, images: list[SSTImage], *,
                            bottom_level: bool = False):
         """Fig. 6(b): yield the data-block arrays first (they are ready
@@ -93,6 +138,30 @@ class CompactionExecutor:
         SST generation itself is offloaded, as in the paper)."""
         return build_image(keys, meta, vals, geom=self.geom,
                            backend=self.backend)
+
+
+@functools.partial(jax.jit, static_argnames=("geom", "bottom_level",
+                                             "sort_mode", "backend",
+                                             "run_lens"))
+def compact_batch(img: SSTImage, *, geom: SSTGeometry,
+                  bottom_level: bool = False, sort_mode: str = "device",
+                  backend: str = "auto",
+                  run_lens: tuple[int, ...] | None = None):
+    """One stacked device launch over a leading *job* axis.
+
+    ``img`` holds J independent compaction jobs stacked on axis 0 (every
+    field is ``[J, ...]`` of one job's shape).  Compaction procedures are
+    data-independent (the paper's core scaling argument), so the whole
+    batch is a single ``vmap`` over the job axis: one dispatch, one jit
+    cache entry per (shape bucket, run signature), J jobs of occupancy.
+    Returns the stacked output image plus per-job ``CompactionStats``
+    (``crc_ok`` stays a per-job verdict -- one corrupt input must not
+    taint its batch mates)."""
+    def one(im: SSTImage):
+        return compaction.compact(
+            im, geom=geom, bottom_level=bottom_level, sort_mode=sort_mode,
+            backend=backend, run_lens=run_lens)
+    return jax.vmap(one)(img)
 
 
 @functools.partial(jax.jit, static_argnames=("geom", "backend"))

@@ -14,10 +14,9 @@ from __future__ import annotations
 
 import dataclasses
 import json
-import os
 import time
 
-from repro.training.train_loop import Trainer, TrainLoopConfig, TrainResult
+from repro.training.train_loop import TrainResult
 
 
 @dataclasses.dataclass

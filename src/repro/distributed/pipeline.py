@@ -14,7 +14,6 @@ stack on the same params.
 
 from __future__ import annotations
 
-import functools
 
 import jax
 import jax.numpy as jnp
@@ -51,10 +50,7 @@ def pipeline_apply(stage_params, x, stage_fn, mesh: Mesh, *,
             buf, outs = carry
             # stage 0 ingests microbatch t (if any remain)
             take = jnp.clip(t, 0, m - 1)
-            inject = jnp.where(idx == 0,
-                               jnp.asarray(t < m, xs.dtype), 0)
             buf = jnp.where((idx == 0) & (t < m), xs[take], buf)
-            del inject
             y = stage_fn(params, buf)
             # last stage emits microbatch (t - n_stages + 1)
             emit_t = t - (n_stages - 1)

@@ -32,7 +32,6 @@ def _scan_kernel(u_ref, dt_ref, b_ref, c_ref, a_ref, d_ref, h0_ref,
                  y_ref, h_ref, *, seq: int):
     a = a_ref[...]                    # [dT, ds] fp32 (negative)
     d_skip = d_ref[...].reshape(-1)   # [dT] (1-D blocks may load as 2-D)
-    ds = a.shape[-1]
 
     def row(ref, t):
         return pl.load(ref, (pl.dslice(0, 1), pl.dslice(t, 1),

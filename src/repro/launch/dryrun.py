@@ -146,7 +146,6 @@ def run_compaction_cell(multi_pod: bool, blocks_per_shard: int = 2048
     import functools
 
     from repro.configs.luda_paper import PAPER
-    from repro.core import compaction
     from repro.core.formats import SSTImage
 
     geom = PAPER.geometry(256)
@@ -239,7 +238,6 @@ def main():
     t_start = time.time()
     for arch, shape in jobs:
         for mp in meshes:
-            t0 = time.time()
             rec = run_and_save(arch, shape, mp, args.out,
                                args.skip_existing)
             status = ("SKIP: " + rec["skipped"]) if "skipped" in rec else \

@@ -194,6 +194,7 @@ class EngineStats:
     host_seconds: float = 0.0
     device_seconds: float = 0.0
     sort_seconds: float = 0.0
+    batched: bool = False   # produced by a stacked multi-job launch
 
 
 class CpuCompactionEngine:
@@ -280,6 +281,14 @@ class CpuCompactionEngine:
         stats.host_seconds += t_read
         return out, stats
 
+    def compact_many(self, jobs: list[tuple[list[str], bool]]
+                     ) -> list[tuple[SSTImage, EngineStats]]:
+        """Sequential per-job fallback (the CPU has no batch dimension to
+        exploit); same interface as the device engine so ``ShardedDB`` can
+        share either engine across shards."""
+        return [self.compact_paths(paths, bottom_level=bottom)
+                for paths, bottom in jobs]
+
     def build_image(self, keys, meta, vals, n_blocks: int | None = None
                     ) -> SSTImage:
         """Pack sorted entries into a wire image (numpy phase 3)."""
@@ -345,6 +354,11 @@ class DeviceCompactionEngine:
         self.jit_bucket_counts: dict[int, int] = {}
         self.jit_bucket_hits = 0
         self.jit_bucket_misses = 0
+        # batched-launch accounting (compact_many): one "launch" is one
+        # stacked vmapped dispatch covering >=2 same-signature jobs
+        self.batch_launches = 0
+        self.batch_jobs = 0
+        self.max_batch_jobs = 0
 
     def close(self):
         if self._reader is not None:
@@ -387,6 +401,111 @@ class DeviceCompactionEngine:
             imgs.append(SSTImage(*(jnp.asarray(a) for a in im)))
         return self._compact_staged(imgs, real_blocks,
                                     bottom_level=bottom_level, t0=t0)
+
+    def compact_many(self, jobs: list[tuple[list[str], bool]]
+                     ) -> list[tuple[SSTImage, EngineStats]]:
+        """Compact several independent jobs, coalescing same-shape-bucket
+        jobs into single stacked device launches.
+
+        ``jobs``: ``[(input_paths, bottom_level)]`` -- typically one job
+        per shard, published by ``ShardedDB``'s global queue.  Jobs are
+        grouped by ``scheduler.batch_signature`` of their *actual* input
+        block counts; each >=2-job group becomes ONE vmapped dispatch
+        (``offload.compact_batch``) with per-job CRC verdicts, singleton
+        groups take the ordinary single-job path.  Results come back in
+        input order and are bit-identical to per-job ``compact_paths``.
+        """
+        import jax.numpy as jnp
+
+        from repro.core.background import PrefetchReader
+        from repro.core.scheduler import batch_signature
+        from repro.lsm import sstable
+        t_read0 = time.perf_counter()
+        if self._reader is None:
+            self._reader = PrefetchReader()
+        flat_paths = [p for paths, _ in jobs for p in paths]
+        flat_imgs = list(self._reader.read_all(flat_paths, sstable.read_sst))
+        t_read = time.perf_counter() - t_read0
+        job_imgs, job_blocks, off = [], [], 0
+        for paths, _ in jobs:
+            imgs = flat_imgs[off:off + len(paths)]
+            off += len(paths)
+            job_imgs.append(imgs)
+            job_blocks.append([im.keys.shape[0] for im in imgs])
+
+        groups: dict[tuple, list[int]] = {}
+        for j, (_, bottom) in enumerate(jobs):
+            sig = batch_signature(job_blocks[j], bottom,
+                                  sort_mode=self.executor.sort_mode)
+            groups.setdefault(sig, []).append(j)
+
+        results: list = [None] * len(jobs)
+        read_share = t_read / max(1, len(jobs))
+        for sig, idxs in groups.items():
+            if len(idxs) == 1:
+                j = idxs[0]
+                t0 = time.perf_counter()
+                imgs = [SSTImage(*(jnp.asarray(a) for a in im))
+                        for im in job_imgs[j]]
+                out, es = self._compact_staged(
+                    imgs, sum(job_blocks[j]), bottom_level=jobs[j][1],
+                    t0=t0)
+                es.host_seconds += read_share
+                results[j] = (out, es)
+                continue
+            results_group = self._compact_batched(
+                [job_imgs[j] for j in idxs], bucket=sig[1],
+                bottom_level=jobs[idxs[0]][1], read_share=read_share)
+            for j, res in zip(idxs, results_group):
+                results[j] = res
+        return results
+
+    def _compact_batched(self, group_imgs, *, bucket, bottom_level,
+                         read_share):
+        """One stacked launch over >=2 same-signature jobs."""
+        import jax.numpy as jnp
+
+        from repro.core import offload
+        t0 = time.perf_counter()
+        staged = []
+        for imgs in group_imgs:
+            imgs = [SSTImage(*(jnp.asarray(np.asarray(a)) for a in im))
+                    for im in imgs]
+            if self.executor.sort_mode == "merge":
+                imgs = [offload.pad_image_blocks(
+                    im, offload.next_pow2(im.keys.shape[0]), self.geom)
+                    for im in imgs]
+            staged.append(imgs)
+        n_jobs = len(staged)
+        self._note_bucket(bucket)
+        self.batch_launches += 1
+        self.batch_jobs += n_jobs
+        self.max_batch_jobs = max(self.max_batch_jobs, n_jobs)
+        t_exec0 = time.perf_counter()
+        outs = self.executor.compact_many(staged, bottom_level=bottom_level,
+                                          pad_blocks=bucket)
+        outs = [(SSTImage(*(np.asarray(a) for a in out)), s)
+                for out, s in outs]
+        exec_wall = time.perf_counter() - t_exec0
+        host_share = max(time.perf_counter() - t0 - exec_wall, 0.0) / n_jobs
+        wire = self.geom.wire_words_per_block * 4
+        results = []
+        for (out, s), imgs, raw in zip(outs, staged, group_imgs):
+            total_blocks = sum(im.keys.shape[0] for im in imgs)
+            stats = EngineStats(
+                n_input=int(s.n_input), n_live=int(s.n_live),
+                n_dropped=int(s.n_dropped), crc_ok=bool(s.crc_ok),
+                bytes_in=sum(im.keys.shape[0] for im in raw) * wire,
+                bytes_out=int(s.bytes_out), batched=True)
+            stats.host_seconds = host_share + read_share
+            stats.device_seconds = model_device_seconds(
+                stats.bytes_in, stats.bytes_out, self.geom)
+            n_runs = len(imgs) + (1 if bucket > total_blocks else 0)
+            stats.sort_seconds = model_sort_seconds(
+                bucket * self.geom.block_kvs, self.geom.key_lanes + 2,
+                n_runs, self.executor.sort_mode)
+            results.append((out, stats))
+        return results
 
     def _compact_staged(self, imgs, real_blocks, *, bottom_level, t0):
         from repro.core import offload

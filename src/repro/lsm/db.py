@@ -76,10 +76,36 @@ class DBStats:
     flush_host_seconds: float = 0.0
     bloom_negative_skips: int = 0
     write_stalls: int = 0
+    batched_compactions: int = 0   # jobs installed from a stacked launch
+
+    def add(self, other: "DBStats") -> "DBStats":
+        """Field-wise sum (aggregation across shards)."""
+        return DBStats(**{f.name: getattr(self, f.name) +
+                          getattr(other, f.name)
+                          for f in dataclasses.fields(DBStats)})
+
+
+def make_engine(cfg: DBConfig):
+    """Build the compaction engine a ``DBConfig`` describes (shared by
+    ``LsmDB`` and ``ShardedDB``)."""
+    if cfg.engine == "device":
+        return ce.DeviceCompactionEngine(cfg.geom, sort_mode=cfg.sort_mode)
+    if cfg.engine == "cpu":
+        return ce.CpuCompactionEngine(cfg.geom, threads=cfg.threads)
+    raise ValueError(f"unknown engine {cfg.engine!r}")
 
 
 class LsmDB:
-    def __init__(self, path: str, cfg: DBConfig | None = None):
+    def __init__(self, path: str, cfg: DBConfig | None = None, *,
+                 engine=None, compaction_sink=None):
+        """``engine``: inject a (possibly shared) compaction engine instead
+        of building one from ``cfg`` -- ``ShardedDB`` passes one engine to
+        every shard so batched cross-shard launches share a jit cache.
+        ``compaction_sink``: when set, this DB never runs compactions
+        itself; it calls ``compaction_sink(self)`` whenever it has
+        compaction work, and the sink owner drives ``pick_compaction`` /
+        ``apply_compaction`` (see ``core.background.GlobalCompactionQueue``).
+        """
         self.path = path
         self.cfg = cfg or DBConfig()
         os.makedirs(path, exist_ok=True)
@@ -94,7 +120,9 @@ class LsmDB:
         self.mem = memtable.MemTable()
         self.imm: list[ImmutableMemTable] = []
         self.stats = DBStats()
-        self.engine = self._make_engine()
+        self._owns_engine = engine is None
+        self._compaction_sink = compaction_sink
+        self.engine = engine if engine is not None else self._make_engine()
         self._memtable_limit = self.cfg.memtable_bytes or self.geom.sst_bytes
         self._wal_path = os.path.join(path, "wal.log")
         self._wal_seg_no = 0
@@ -109,17 +137,15 @@ class LsmDB:
         if self._async:
             self._flush_exec = BackgroundExecutor(
                 workers=max(1, self.cfg.flush_workers), name="flush")
-            self._compact_exec = BackgroundExecutor(workers=1, name="compact")
+            # with a compaction sink the sink owner runs compactions --
+            # a per-DB worker thread would only ever sit idle
+            self._compact_exec = None if compaction_sink is not None else \
+                BackgroundExecutor(workers=1, name="compact")
         else:
             self._flush_exec = self._compact_exec = None
 
     def _make_engine(self):
-        if self.cfg.engine == "device":
-            return ce.DeviceCompactionEngine(self.geom,
-                                             sort_mode=self.cfg.sort_mode)
-        if self.cfg.engine == "cpu":
-            return ce.CpuCompactionEngine(self.geom, threads=self.cfg.threads)
-        raise ValueError(f"unknown engine {self.cfg.engine!r}")
+        return make_engine(self.cfg)
 
     def _replay_wal(self):
         """Replay rotated WAL segments (oldest first), then the active WAL.
@@ -466,6 +492,9 @@ class LsmDB:
 
     def _schedule_compaction(self):
         """Enqueue the background compaction drain (at most one in flight)."""
+        if self._compaction_sink is not None:
+            self._compaction_sink(self)
+            return
         with self._lock:
             if self._compact_scheduled or self._closed:
                 return
@@ -498,10 +527,10 @@ class LsmDB:
             raise
 
     def maybe_compact(self):
-        if self._async:
-            # foreground compaction would race the background worker on
-            # the same job (double-installing overlapping outputs); route
-            # through the single-worker drain instead
+        if self._compaction_sink is not None or self._async:
+            # foreground compaction would race the sink owner / background
+            # worker on the same job (double-installing overlapping
+            # outputs); route through the single drain instead
             self._schedule_compaction()
             return
         if self.cfg.scheduler.paper_faithful:
@@ -522,9 +551,9 @@ class LsmDB:
             guard += 1
 
     def compact_once(self) -> bool:
-        if self._async:
+        if self._compaction_sink is not None or self._async:
             # side-effect-free pending check (pick() advances the
-            # round-robin pointer), then hand off to the worker
+            # round-robin pointer), then hand off to the drain
             with self._lock:
                 v = self.versions.current
                 pending = any(
@@ -544,21 +573,32 @@ class LsmDB:
         ptr = self.scheduler.compact_pointer.get(level)
         return (level, ptr.hex()) if ptr is not None else None
 
-    def compact_job(self, job: CompactionJob):
-        # trivial move: single input, nothing overlapping below
-        if len(job.inputs_lo) == 1 and not job.inputs_hi and job.level > 0:
-            fm = job.inputs_lo[0]
-            with self._lock:
-                edit = VersionEdit(
-                    added=[(job.level + 1, fm)],
-                    deleted=[(job.level, fm.file_no)],
-                    compact_pointer=self._pointer_edit(job.level))
-                self.versions.log_and_apply(edit)
-                self.stats.trivial_moves += 1
-            return
-        paths = [f.path for f in job.all_inputs]
-        out, es = self.engine.compact_paths(paths,
-                                            bottom_level=job.bottom_level)
+    def pick_compaction(self) -> CompactionJob | None:
+        """Pick the next compaction job (advances the round-robin pointer).
+        External coordinators (``GlobalCompactionQueue``) pair this with
+        ``apply_trivial_move`` / ``apply_compaction``."""
+        with self._lock:
+            return self.scheduler.pick(self.versions.current)
+
+    @staticmethod
+    def is_trivial_move(job: CompactionJob) -> bool:
+        # single input, nothing overlapping below
+        return len(job.inputs_lo) == 1 and not job.inputs_hi and job.level > 0
+
+    def apply_trivial_move(self, job: CompactionJob):
+        fm = job.inputs_lo[0]
+        with self._lock:
+            edit = VersionEdit(
+                added=[(job.level + 1, fm)],
+                deleted=[(job.level, fm.file_no)],
+                compact_pointer=self._pointer_edit(job.level))
+            self.versions.log_and_apply(edit)
+            self.stats.trivial_moves += 1
+
+    def apply_compaction(self, job: CompactionJob, out: SSTImage, es):
+        """Install a compaction result computed by the engine: verify the
+        per-job CRC verdict, install outputs at ``level+1``, log one edit
+        bundling additions + input deletions, drop inputs."""
         if not es.crc_ok:
             # durability: verify inputs BEFORE installing outputs, logging
             # the version edit, or deleting anything -- a corrupt input
@@ -583,11 +623,22 @@ class LsmDB:
             s.compact_host_seconds += es.host_seconds
             s.compact_device_seconds += es.device_seconds
             s.compact_sort_seconds += es.sort_seconds
+            if getattr(es, "batched", False):
+                s.batched_compactions += 1
         for f in job.all_inputs:
             try:
                 os.remove(f.path)
             except FileNotFoundError:
                 pass
+
+    def compact_job(self, job: CompactionJob):
+        if self.is_trivial_move(job):
+            self.apply_trivial_move(job)
+            return
+        paths = [f.path for f in job.all_inputs]
+        out, es = self.engine.compact_paths(paths,
+                                            bottom_level=job.bottom_level)
+        self.apply_compaction(job, out, es)
 
     # ------------------------------------------------------------------
 
@@ -598,7 +649,8 @@ class LsmDB:
             return
         while True:
             self._flush_exec.wait_idle()
-            self._compact_exec.wait_idle()
+            if self._compact_exec is not None:
+                self._compact_exec.wait_idle()
             with self._lock:
                 if not self.imm and not self._compact_scheduled:
                     return
@@ -620,9 +672,10 @@ class LsmDB:
                 self._closed = True
             if self._async:
                 self._flush_exec.shutdown(wait=False)
-                self._compact_exec.shutdown(wait=False)
+                if self._compact_exec is not None:
+                    self._compact_exec.shutdown(wait=False)
             close_engine = getattr(self.engine, "close", None)
-            if close_engine:
+            if close_engine and self._owns_engine:
                 close_engine()
             self._wal.flush()
             self._wal.close()

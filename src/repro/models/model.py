@@ -8,12 +8,11 @@ cache as the scan output.
 
 from __future__ import annotations
 
-import functools
 
 import jax
 import jax.numpy as jnp
 
-from repro.models import attention, blocks, layers
+from repro.models import blocks, layers
 from repro.models.config import ModelConfig
 
 VOCAB_PAD = 2048

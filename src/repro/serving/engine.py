@@ -32,14 +32,23 @@ class ServeEngine:
 
     def generate(self, prompts: np.ndarray, max_new: int,
                  eos: int | None = None):
-        """prompts: int32 [B, S] (equal length).  Returns [B, max_new]."""
+        """prompts: int32 [B, S] (equal length).  Returns [B, max_new].
+
+        The returned ``(cache, pos)`` is a *resumable* state: the last
+        emitted token has NOT been decoded into the cache yet, so feeding
+        it back through ``decode_step`` at ``pos`` continues exactly where
+        an uninterrupted run would have gone.  (Decoding it eagerly would
+        bake its KV entry into the cache; a later resume would then write
+        a duplicate entry at the next position and diverge.)"""
         prompts = jnp.asarray(prompts, jnp.int32)
         logit, cache, pos = model.prefill(
             self.params, {"tokens": prompts}, self.cfg, self.max_len)
         outs = []
         tok = jnp.argmax(logit, -1)[:, None].astype(jnp.int32)
-        for _ in range(max_new):
+        for i in range(max_new):
             outs.append(np.asarray(tok)[:, 0])
+            if i + 1 == max_new:
+                break   # keep the state resumable (and skip a dead decode)
             logits, cache = self._decode(self.params, cache, tok, pos)
             tok = jnp.argmax(logits[:, 0], -1)[:, None].astype(jnp.int32)
             pos = pos + 1

@@ -15,7 +15,6 @@ import dataclasses
 import time
 
 import jax
-import numpy as np
 
 from repro.checkpoint.store import CheckpointStore
 from repro.data.tokens import BigramStream, make_train_batch

@@ -1,6 +1,5 @@
 """End-to-end tests of the LUDA device compaction pipeline."""
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest

@@ -6,9 +6,8 @@ from repro.testing.hypo import HealthCheck, given, settings, st
 
 from repro.core.formats import SSTGeometry
 from repro.core.scheduler import SchedulerConfig
-from repro.lsm import cpu_engine as ce
 from repro.lsm import sstable
-from repro.lsm.db import DBConfig, DBStats, LsmDB
+from repro.lsm.db import DBConfig, LsmDB
 
 GEOM = SSTGeometry(key_bytes=16, value_bytes=32, block_bytes=512,
                    sst_bytes=2048)

@@ -6,7 +6,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.checkpoint.store import CheckpointStore, checkpoint_db_config
+from repro.checkpoint.store import CheckpointStore
 from repro.configs import get_smoke_config
 from repro.distributed import grad_compress
 from repro.distributed.fault_tolerance import Supervisor, SupervisorConfig
@@ -191,12 +191,12 @@ def test_compressed_mean_matches_true_mean():
     n_dev = len(jax.devices())
     if n_dev < 2:
         pytest.skip("single device: all_to_all degenerate")
-    mesh = jax.make_mesh((n_dev,), ("data",))
+    jax.make_mesh((n_dev,), ("data",))
     rng = np.random.default_rng(1)
     grads = {"w": jnp.asarray(rng.standard_normal((n_dev, 256))
                               .astype(np.float32))}
     # per-shard distinct gradients; compare vs numpy mean
-    err = grad_compress.init_error_state({"w": grads["w"][0]})
+    grad_compress.init_error_state({"w": grads["w"][0]})
     # wire-byte accounting sanity
     assert grad_compress.wire_bytes_compressed({"w": grads["w"][0]}) * 4 \
         == grad_compress.wire_bytes_fp32({"w": grads["w"][0]})
