@@ -36,10 +36,31 @@ for _p in (_ROOT, os.path.join(_ROOT, "src")):
         sys.path.insert(0, _p)
 
 
+def _ycsb_rows() -> dict:
+    """End-to-end YCSB smoke row for the gate: get tail latency walks the
+    full read path (memtable, immutable queue, L0 newest-first, leveled
+    binary search) -- a regression surface the kernel microbenches cannot
+    see.  Sync cpu engine, tiny store, so it adds ~1s to the emit step."""
+    import shutil
+
+    from benchmarks.ycsb_bench import measure_latency
+    db, rep = measure_latency("cpu", async_mode=False, records=120,
+                              operations=240, value_size=64)
+    db.close()
+    shutil.rmtree(rep["path"], ignore_errors=True)
+    return {
+        "ycsb.get.p99_cpu_smoke": {
+            "us": rep["get_percentiles_us"][99.0],
+            "derived": "records=120;ops=240;value=64;sync",
+        },
+    }
+
+
 def emit(out_path: str, iters: int = 1) -> dict:
     from benchmarks.kernel_bench import bench_kernels
     rows = {name: {"us": us, "derived": derived}
             for name, us, derived in bench_kernels(iters=iters)}
+    rows.update(_ycsb_rows())
     doc = {
         "rows": rows,
         "meta": {

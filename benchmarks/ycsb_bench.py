@@ -119,25 +119,39 @@ def sweep(records: int, operations: int, value_sizes=(128, 256, 1024),
 
 
 def percentiles(lat_us, qs=(50.0, 99.0, 99.9)) -> dict[float, float]:
-    """{q: latency_us} from a raw latency list (nearest-rank:
-    ceil(q/100 * n)-th smallest value)."""
-    import math
+    """{q: latency_us} with linear interpolation between closest ranks
+    (``numpy.percentile`` default semantics).  The previous
+    truncating-rank pick collapsed p99 and p99.9 onto the same sample at
+    bench-sized n and biased small-sample tails low by up to a full
+    sample gap."""
     if not lat_us:
         return {q: 0.0 for q in qs}
     arr = sorted(lat_us)
     n = len(arr)
-    return {q: arr[max(0, min(n - 1, math.ceil(q / 100.0 * n) - 1))]
-            for q in qs}
+    out = {}
+    for q in qs:
+        pos = (q / 100.0) * (n - 1)
+        lo = int(pos)
+        hi = min(lo + 1, n - 1)
+        out[q] = arr[lo] + (arr[hi] - arr[lo]) * (pos - lo)
+    return out
 
 
 def measure_latency(engine: str, *, async_mode: bool, records: int,
                     operations: int, value_size: int = 128, seed: int = 42,
                     flush_workers: int = 2, path: str | None = None,
-                    sort_mode: str = "merge") -> tuple[LsmDB, dict]:
+                    sort_mode: str = "merge", metrics=None,
+                    tracer=None) -> tuple[LsmDB, dict]:
     """Run load + YCSB-A against one store; record every op's latency.
 
     Returns the still-open DB (drained via ``wait_idle``) plus a report
-    with p50/p99/p99.9 split by op type.  Caller closes the DB."""
+    with p50/p99/p99.9 split by op type.  Caller closes the DB.
+
+    ``metrics``/``tracer`` (obs registry / tracer) flow into the store;
+    the bench also records its own externally-measured op latencies as
+    ``ycsb.op.latency_us`` histograms in the same registry, so the
+    store-side histogram estimates can be cross-checked against ground
+    truth (see ``check_histogram_p99``)."""
     own_path = path is None
     path = path or tempfile.mkdtemp(
         prefix=f"lat-{engine}-{'async' if async_mode else 'sync'}-")
@@ -148,7 +162,13 @@ def measure_latency(engine: str, *, async_mode: bool, records: int,
         # flush and compact -- the stalls under comparison
         memtable_bytes=8 * 1024,
         scheduler=SchedulerConfig(l0_trigger=4, base_bytes=128 * 1024),
-        async_compaction=async_mode, flush_workers=flush_workers))
+        async_compaction=async_mode, flush_workers=flush_workers,
+        metrics=metrics, tracer=tracer))
+    h_put = h_get = None
+    if metrics is not None:
+        h_put = metrics.histogram("ycsb.op.latency_us", op="put",
+                                  help="bench-measured op latency (us)")
+        h_get = metrics.histogram("ycsb.op.latency_us", op="get")
     spec = WorkloadSpec.ycsb_a(records=records, operations=operations,
                                value_size=value_size, seed=seed)
     wl = YCSBWorkload(spec)
@@ -163,7 +183,14 @@ def measure_latency(engine: str, *, async_mode: bool, records: int,
                 else:
                     db.put(key, val)
                 dt_us = (time.perf_counter() - t0) * 1e6
-                (read_lat if op == "read" else write_lat).append(dt_us)
+                if op == "read":
+                    read_lat.append(dt_us)
+                    if h_get is not None:
+                        h_get.pend(dt_us)
+                else:
+                    write_lat.append(dt_us)
+                    if h_put is not None:
+                        h_put.pend(dt_us)
         t_ops = time.perf_counter() - t_run0
         db.wait_idle()
         t_drained = time.perf_counter() - t_run0
@@ -191,8 +218,8 @@ def measure_latency(engine: str, *, async_mode: bool, records: int,
 
 def measure_sharded(engine: str, *, shards: int, records: int,
                     operations: int, value_size: int = 128, seed: int = 42,
-                    async_mode: bool = False, sort_mode: str = "merge"
-                    ) -> dict:
+                    async_mode: bool = False, sort_mode: str = "merge",
+                    metrics=None, tracer=None) -> dict:
     """Multi-tenant mode: one ``ShardedDB`` with a learned boundary table,
     per-op latencies tagged by owning shard.
 
@@ -206,12 +233,21 @@ def measure_sharded(engine: str, *, shards: int, records: int,
     # table from a uniform sample of the key population
     sample = [key_of(i) for i in range(0, records,
                                        max(1, records // 1024))]
+    # small per-shard memtable + quotas so the default workload sizes
+    # rotate, flush and compact in every shard -- cross-shard rounds
+    # with >=2 same-shape jobs then coalesce into stacked launches,
+    # which is the thing under measurement (and under tracing)
     db = ShardedDB(path, DBConfig(
         geom=bench_geometry(value_size), engine=engine,
-        sort_mode=sort_mode, memtable_bytes=16 * 1024,
-        scheduler=SchedulerConfig(l0_trigger=4, base_bytes=256 * 1024),
-        async_compaction=async_mode),
+        sort_mode=sort_mode, memtable_bytes=2 * 1024,
+        scheduler=SchedulerConfig(l0_trigger=4, base_bytes=32 * 1024),
+        async_compaction=async_mode, metrics=metrics, tracer=tracer),
         shards=shards, sample_keys=sample)
+    h_put = h_get = None
+    if metrics is not None:
+        h_put = metrics.histogram("ycsb.op.latency_us", op="put",
+                                  help="bench-measured op latency (us)")
+        h_get = metrics.histogram("ycsb.op.latency_us", op="get")
     spec = WorkloadSpec.ycsb_a(records=records, operations=operations,
                                value_size=value_size, seed=seed)
     wl = YCSBWorkload(spec)
@@ -229,6 +265,9 @@ def measure_sharded(engine: str, *, shards: int, records: int,
                 dt_us = (time.perf_counter() - t0) * 1e6
                 shard_lat[db.shard_of(key)].append(dt_us)
                 all_lat.append(dt_us)
+                h = h_get if op == "read" else h_put
+                if h is not None:
+                    h.pend(dt_us)
         t_ops = time.perf_counter() - t0_run
         db.flush()
         db.maybe_compact()
@@ -242,7 +281,10 @@ def measure_sharded(engine: str, *, shards: int, records: int,
             "aggregate_percentiles_us": percentiles(all_lat),
             "per_shard_p99_us": [percentiles(lat)[99.0]
                                  for lat in shard_lat],
+            "per_shard_p999_us": [percentiles(lat)[99.9]
+                                  for lat in shard_lat],
             "per_shard_ops": [len(lat) for lat in shard_lat],
+            "write_stalls": s.write_stalls,
             "flushes": s.flushes, "compactions": s.compactions,
             "batched_compactions": s.batched_compactions,
             "batch_launches": getattr(eng, "batch_launches", 0),
@@ -271,10 +313,13 @@ def _print_sharded(rep):
           f"mode={rep['mode']}  {rep['ops_per_sec']:.0f} ops/s  "
           f"aggregate p50/p99/p99.9 = {agg[50.0]:.1f}/{agg[99.0]:.1f}/"
           f"{agg[99.9]:.1f}us")
-    for i, (p99, n) in enumerate(zip(rep["per_shard_p99_us"],
-                                     rep["per_shard_ops"])):
-        print(f"  shard {i}: {n:>7d} ops  p99 {p99:>10.1f}us")
-    print(f"  compactions={rep['compactions']} "
+    for i, (p99, p999, n) in enumerate(zip(rep["per_shard_p99_us"],
+                                           rep["per_shard_p999_us"],
+                                           rep["per_shard_ops"])):
+        print(f"  shard {i}: {n:>7d} ops  p99 {p99:>10.1f}us  "
+              f"p99.9 {p999:>10.1f}us")
+    print(f"  write_stalls={rep['write_stalls']} "
+          f"compactions={rep['compactions']} "
           f"batched={rep['batched_compactions']} "
           f"launches={rep['batch_launches']} "
           f"(jobs={rep['batch_jobs']}, max/launch="
@@ -291,8 +336,8 @@ def _fmt_row(rep):
 
 def compare_sync_async(engine: str, *, records: int, operations: int,
                        value_size: int = 128, seed: int = 42,
-                       warmup: bool = True,
-                       sort_mode: str = "merge") -> dict:
+                       warmup: bool = True, sort_mode: str = "merge",
+                       metrics=None, tracer=None) -> dict:
     """The paper's Fig.-12-style stability comparison: identical workload,
     sync vs async write path.  Verifies post-drain get() equivalence."""
     from repro.data.ycsb import key_of
@@ -309,13 +354,15 @@ def compare_sync_async(engine: str, *, records: int, operations: int,
     db_s, rep_s = measure_latency(engine, async_mode=False, records=records,
                                   operations=operations,
                                   value_size=value_size, seed=seed,
-                                  sort_mode=sort_mode)
+                                  sort_mode=sort_mode, metrics=metrics,
+                                  tracer=tracer)
     try:
         db_a, rep_a = measure_latency(engine, async_mode=True,
                                       records=records,
                                       operations=operations,
                                       value_size=value_size, seed=seed,
-                                      sort_mode=sort_mode)
+                                      sort_mode=sort_mode, metrics=metrics,
+                                      tracer=tracer)
     except BaseException:
         try:
             db_s.close()
@@ -351,6 +398,63 @@ def compare_sync_async(engine: str, *, records: int, operations: int,
             "p99_improved": p99_a < p99_s}
 
 
+def check_histogram_p99(metrics, exact_p99_us: float, op: str | None
+                        ) -> tuple[float, float, bool]:
+    """Cross-check the registry's ``ycsb.op.latency_us`` histogram p99
+    estimate against the exact bench-computed p99.  ``op=None`` merges
+    every op's series (vs an all-ops exact percentile) -- exercising the
+    bucket-wise merge the per-shard aggregation relies on.
+
+    Returns ``(estimate, exact, ok)``.  The histogram reports geometric
+    bucket midpoints from 2**(1/4)-wide buckets, so a correct estimate
+    sits within half a bucket of the sample plus at most one bucket of
+    rank error: tolerance factor ``2**0.5``."""
+    from repro.obs import merge_histograms
+    if op is None:
+        h = merge_histograms(metrics.find("ycsb.op.latency_us"))
+    else:
+        h = metrics.find("ycsb.op.latency_us", op=op)
+    if h is None or h.snapshot()[1] == 0:
+        return 0.0, exact_p99_us, False
+    est = h.percentile(99.0)
+    tol = 2.0 ** 0.5
+    ok = (exact_p99_us / tol <= est <= exact_p99_us * tol
+          if exact_p99_us > 0 else True)
+    return est, exact_p99_us, ok
+
+
+def _make_obs(args):
+    """(metrics, tracer) when any obs export flag is set, else Nones."""
+    if not (args.trace_out or args.metrics_out or args.prom_out):
+        return None, None
+    from repro.obs import MetricsRegistry, Tracer
+    return MetricsRegistry(), Tracer()
+
+
+def _export_obs(args, metrics, tracer, exact_p99_us=None, op=None) -> bool:
+    """Write the requested artifacts; cross-check the histogram p99
+    against the bench-exact value when available.  Returns ok."""
+    ok = True
+    if metrics is None:
+        return ok
+    from repro.obs import write_metrics, write_prometheus
+    if args.trace_out:
+        tracer.export(args.trace_out)
+        print(f"trace written to {args.trace_out} "
+              f"({len(tracer)} events)")
+    if args.metrics_out:
+        write_metrics(metrics, args.metrics_out)
+        print(f"metrics JSON written to {args.metrics_out}")
+    if args.prom_out:
+        write_prometheus(metrics, args.prom_out)
+        print(f"Prometheus text written to {args.prom_out}")
+    if exact_p99_us is not None:
+        est, exact, ok = check_histogram_p99(metrics, exact_p99_us, op)
+        print(f"histogram p99 cross-check ({op or 'all ops'}): estimate "
+              f"{est:.1f}us vs exact {exact:.1f}us within one bucket: {ok}")
+    return ok
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--engine", default="device", choices=["device", "cpu"])
@@ -369,25 +473,42 @@ def main(argv=None):
     ap.add_argument("--value-size", type=int, default=128)
     ap.add_argument("--seed", type=int, default=42)
     ap.add_argument("--no-warmup", action="store_true")
+    ap.add_argument("--trace-out", default=None, metavar="PATH",
+                    help="write a Chrome/Perfetto trace_event JSON of the "
+                         "run (load chrome://tracing or ui.perfetto.dev)")
+    ap.add_argument("--metrics-out", default=None, metavar="PATH",
+                    help="write the metrics registry snapshot as JSON")
+    ap.add_argument("--prom-out", default=None, metavar="PATH",
+                    help="write the metrics registry in Prometheus text "
+                         "exposition format")
     args = ap.parse_args(argv)
+    metrics, tracer = _make_obs(args)
     if args.shards > 0:
         rep = measure_sharded(
             args.engine, shards=args.shards, records=args.records,
             operations=args.operations, value_size=args.value_size,
             seed=args.seed, async_mode=args.async_mode,
-            sort_mode=args.sort_mode)
+            sort_mode=args.sort_mode, metrics=metrics, tracer=tracer)
         _print_sharded(rep)
-        return 0
+        ok = _export_obs(args, metrics, tracer,
+                         rep["aggregate_percentiles_us"][99.0], op=None)
+        return 0 if ok else 1
     if args.async_mode:
+        if metrics is not None:
+            print("note: --trace-out/--metrics-out/--prom-out merge both "
+                  "modes of the sync/async comparison into one export")
         res = compare_sync_async(
             args.engine, records=args.records, operations=args.operations,
             value_size=args.value_size, seed=args.seed,
-            warmup=not args.no_warmup, sort_mode=args.sort_mode)
+            warmup=not args.no_warmup, sort_mode=args.sort_mode,
+            metrics=metrics, tracer=tracer)
+        _export_obs(args, metrics, tracer)
         return 0 if (res["mismatches"] == 0 and res["p99_improved"]) else 1
     db, rep = measure_latency(
         args.engine, async_mode=False, records=args.records,
         operations=args.operations, value_size=args.value_size,
-        seed=args.seed, sort_mode=args.sort_mode)
+        seed=args.seed, sort_mode=args.sort_mode, metrics=metrics,
+        tracer=tracer)
     db.close()
     shutil.rmtree(rep["path"], ignore_errors=True)
     p, g = rep["put_percentiles_us"], rep["get_percentiles_us"]
@@ -395,7 +516,8 @@ def main(argv=None):
           f"put p50/p99/p99.9 = {p[50.0]:.1f}/{p[99.0]:.1f}/"
           f"{p[99.9]:.1f}us  get p50/p99 = {g[50.0]:.1f}/{g[99.0]:.1f}us  "
           f"{rep['ops_per_sec']:.0f} ops/s")
-    return 0
+    ok = _export_obs(args, metrics, tracer, p[99.0], op="put")
+    return 0 if ok else 1
 
 
 def p99_timeline(stamps, n_windows: int = 20):
@@ -406,10 +528,9 @@ def p99_timeline(stamps, n_windows: int = 20):
     out = []
     for w in range(n_windows):
         lo, hi = w * t_end / n_windows, (w + 1) * t_end / n_windows
-        lat = sorted(dt for t, _, dt in stamps if lo <= t < hi)
+        lat = [dt for t, _, dt in stamps if lo <= t < hi]
         if lat:
-            out.append((0.5 * (lo + hi),
-                        lat[min(len(lat) - 1, int(0.99 * len(lat)))]))
+            out.append((0.5 * (lo + hi), percentiles(lat, (99.0,))[99.0]))
     return out
 
 

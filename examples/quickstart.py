@@ -13,6 +13,7 @@ import tempfile
 from repro.core.formats import SSTGeometry
 from repro.core.scheduler import SchedulerConfig
 from repro.lsm.db import DBConfig, LsmDB
+from repro.obs import Tracer
 
 
 def main():
@@ -25,7 +26,10 @@ def main():
                                     # "device" = bitonic, "xla", "cooperative"
         memtable_bytes=2000,
         scheduler=SchedulerConfig(l0_trigger=3, base_bytes=64_000))
-    db = LsmDB(path, cfg)
+    # optional: a tracer records the whole flush/compaction lifecycle as
+    # Perfetto-loadable spans (see docs/observability.md)
+    tracer = Tracer()
+    db = LsmDB(path, cfg, tracer=tracer)
 
     print("writing 500 keys with overwrites + deletes ...")
     for i in range(500):
@@ -52,6 +56,11 @@ def main():
 
     db.close()
     shutil.rmtree(path)
+    trace_path = tempfile.mktemp(prefix="luda-trace-", suffix=".json")
+    tracer.export(trace_path)
+    print(f"{len(tracer)} trace events -> {trace_path} "
+          "(load at https://ui.perfetto.dev; "
+          "`python -m repro.obs.report` prints stall attribution)")
     print("ok")
 
 

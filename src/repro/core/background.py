@@ -154,8 +154,12 @@ class GlobalCompactionQueue:
     re-raised through the executor (surfaces on ``wait_idle``/``close``).
     """
 
-    def __init__(self, engine):
+    def __init__(self, engine, tracer=None, metrics=None):
+        from repro.obs.metrics import NULL_REGISTRY
+        from repro.obs.trace import NULL_TRACER
         self.engine = engine
+        self.tracer = tracer if tracer is not None else NULL_TRACER
+        self.metrics = metrics if metrics is not None else NULL_REGISTRY
         self._lock = threading.Lock()
         self._pending: dict[int, object] = {}   # id(db) -> db
         self._scheduled = False
@@ -165,6 +169,15 @@ class GlobalCompactionQueue:
         self.rounds = 0
         self.jobs_run = 0
         self.trivial_moves = 0
+        self._g_depth = self.metrics.gauge(
+            "compact.queue.depth",
+            help="shards with pending compaction work")
+
+    def _sample_depth_locked(self):
+        depth = len(self._pending)
+        self._g_depth.set(depth)
+        if self.tracer.enabled:
+            self.tracer.counter("compact.queue.depth", depth)
 
     def notify(self, db):
         """Mark ``db`` as having (potential) compaction work and make sure
@@ -173,6 +186,7 @@ class GlobalCompactionQueue:
             if self._closed:
                 return
             self._pending[id(db)] = db
+            self._sample_depth_locked()
             if self._scheduled:
                 return
             self._scheduled = True
@@ -189,6 +203,7 @@ class GlobalCompactionQueue:
                 with self._lock:
                     dbs = list(self._pending.values())
                     self._pending.clear()
+                    self._sample_depth_locked()
                     if not dbs:
                         self._scheduled = False
                         return
@@ -220,17 +235,20 @@ class GlobalCompactionQueue:
             return
         self.rounds += 1
         self.jobs_run += len(jobs)
-        results = self.engine.compact_many(jobs)
-        err = None
-        for (db, job), (out, es) in zip(owners, results):
-            try:
-                db.apply_compaction(job, out, es)
-            except BaseException as e:  # noqa: BLE001 - isolated per shard
-                if err is None:
-                    err = e
-            with self._lock:
-                if not self._closed:
-                    self._pending[id(db)] = db
+        with self.tracer.span("compact.round", shards=len(dbs),
+                              jobs=len(jobs)):
+            results = self.engine.compact_many(jobs)
+            err = None
+            for (db, job), (out, es) in zip(owners, results):
+                try:
+                    db.apply_compaction(job, out, es)
+                except BaseException as e:  # noqa: BLE001 - per shard
+                    if err is None:
+                        err = e
+                with self._lock:
+                    if not self._closed:
+                        self._pending[id(db)] = db
+                        self._sample_depth_locked()
         if err is not None:
             raise err
 

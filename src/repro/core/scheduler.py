@@ -79,6 +79,15 @@ class CompactionScheduler:
     def needs_compaction(self, v: Version) -> bool:
         return self.pick(v) is not None
 
+    def debt(self, v: Version) -> float:
+        """Compaction debt: summed score excess over the trigger across
+        levels (0.0 = nothing owed; 1.0 = one full level-trigger worth of
+        overdue compaction).  Sampled as the ``lsm.compaction.debt``
+        gauge on every state transition -- the tail-latency early-warning
+        signal (debt climbs before write stalls appear)."""
+        return sum(max(0.0, self.score(v, lvl) - 1.0)
+                   for lvl in range(NUM_LEVELS - 1))
+
     def score(self, v: Version, level: int) -> float:
         if level == 0:
             return len(v.levels[0]) / self.cfg.l0_trigger

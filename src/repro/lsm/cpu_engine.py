@@ -20,6 +20,7 @@ import time
 import numpy as np
 
 from repro.core.formats import SSTGeometry, SSTImage
+from repro.obs.trace import NULL_TRACER
 
 U32 = np.uint32
 
@@ -202,9 +203,10 @@ class CpuCompactionEngine:
 
     name = "cpu"
 
-    def __init__(self, geom: SSTGeometry, threads: int = 1):
+    def __init__(self, geom: SSTGeometry, threads: int = 1, tracer=None):
         self.geom = geom
         self.threads = threads
+        self.tracer = tracer if tracer is not None else NULL_TRACER
 
     # -- phase 1 -----------------------------------------------------------
     def _unpack(self, img: SSTImage):
@@ -226,8 +228,10 @@ class CpuCompactionEngine:
                 ) -> tuple[SSTImage, EngineStats]:
         t0 = time.perf_counter()
         g = self.geom
-        parts = [self._unpack(SSTImage(*(np.asarray(a) for a in im)))
-                 for im in images]
+        tr = self.tracer
+        with tr.span("compact.crc_verify", inputs=len(images)):
+            parts = [self._unpack(SSTImage(*(np.asarray(a) for a in im)))
+                     for im in images]
         keys = np.concatenate([p[0] for p in parts])
         meta = np.concatenate([p[1] for p in parts])
         vals = np.concatenate([p[2] for p in parts])
@@ -239,14 +243,16 @@ class CpuCompactionEngine:
         # lexsorting the concatenation; the unique trailing index makes
         # the order identical to the old full lexsort bit for bit.
         t_sort0 = time.perf_counter()
-        sk = np.where(valid[:, None], keys, U32(0xFFFFFFFF))
-        inv_meta = (~meta).astype(U32)
-        idx = np.arange(len(sk), dtype=U32)
-        packed = np.ascontiguousarray(
-            np.concatenate([sk, inv_meta[:, None], idx[:, None]],
-                           axis=1).astype(">u4")).view(
-            f"S{4 * (sk.shape[1] + 2)}").ravel()
-        order = _np_merge_run_order(packed, [p[0].shape[0] for p in parts])
+        with tr.span("compact.merge_phase2", runs=len(parts)):
+            sk = np.where(valid[:, None], keys, U32(0xFFFFFFFF))
+            inv_meta = (~meta).astype(U32)
+            idx = np.arange(len(sk), dtype=U32)
+            packed = np.ascontiguousarray(
+                np.concatenate([sk, inv_meta[:, None], idx[:, None]],
+                               axis=1).astype(">u4")).view(
+                f"S{4 * (sk.shape[1] + 2)}").ravel()
+            order = _np_merge_run_order(packed,
+                                        [p[0].shape[0] for p in parts])
         t_sort = time.perf_counter() - t_sort0
         keys_s, meta_s, valid_s = keys[order], meta[order], valid[order]
         vals_s = vals[order]
@@ -256,9 +262,10 @@ class CpuCompactionEngine:
         if bottom_level:
             live &= (meta_s & 1).astype(bool)
 
-        out = self.build_image(keys_s[live], meta_s[live], vals_s[live],
-                               n_blocks=sum(im.keys.shape[0]
-                                            for im in images))
+        with tr.span("compact.format"):
+            out = self.build_image(keys_s[live], meta_s[live], vals_s[live],
+                                   n_blocks=sum(im.keys.shape[0]
+                                                for im in images))
         wire = g.wire_words_per_block * 4
         stats = EngineStats(
             n_input=int(valid.sum()), n_live=int(live.sum()),
@@ -342,9 +349,10 @@ class DeviceCompactionEngine:
     name = "device"
 
     def __init__(self, geom: SSTGeometry, sort_mode: str = "merge",
-                 backend: str = "auto"):
+                 backend: str = "auto", tracer=None):
         from repro.core.offload import CompactionExecutor
         self.geom = geom
+        self.tracer = tracer if tracer is not None else NULL_TRACER
         self.executor = CompactionExecutor(geom, sort_mode=sort_mode,
                                            backend=backend)
         self._reader = None
@@ -395,10 +403,11 @@ class DeviceCompactionEngine:
         t0 = time.perf_counter()
         if self._reader is None:
             self._reader = PrefetchReader()
-        imgs, real_blocks = [], 0
-        for im in self._reader.read_all(paths, sstable.read_sst):
-            real_blocks += im.keys.shape[0]
-            imgs.append(SSTImage(*(jnp.asarray(a) for a in im)))
+        with self.tracer.span("compact.read_inputs", files=len(paths)):
+            imgs, real_blocks = [], 0
+            for im in self._reader.read_all(paths, sstable.read_sst):
+                real_blocks += im.keys.shape[0]
+                imgs.append(SSTImage(*(jnp.asarray(a) for a in im)))
         return self._compact_staged(imgs, real_blocks,
                                     bottom_level=bottom_level, t0=t0)
 
@@ -420,11 +429,14 @@ class DeviceCompactionEngine:
         from repro.core.background import PrefetchReader
         from repro.core.scheduler import batch_signature
         from repro.lsm import sstable
+        t_many0 = time.perf_counter_ns()
         t_read0 = time.perf_counter()
         if self._reader is None:
             self._reader = PrefetchReader()
         flat_paths = [p for paths, _ in jobs for p in paths]
-        flat_imgs = list(self._reader.read_all(flat_paths, sstable.read_sst))
+        with self.tracer.span("compact.read_inputs", files=len(flat_paths)):
+            flat_imgs = list(self._reader.read_all(flat_paths,
+                                                   sstable.read_sst))
         t_read = time.perf_counter() - t_read0
         job_imgs, job_blocks, off = [], [], 0
         for paths, _ in jobs:
@@ -458,6 +470,11 @@ class DeviceCompactionEngine:
                 bottom_level=jobs[idxs[0]][1], read_share=read_share)
             for j, res in zip(idxs, results_group):
                 results[j] = res
+        if self.tracer.enabled:
+            self.tracer.complete(
+                "compact_many", t_many0,
+                time.perf_counter_ns() - t_many0,
+                args={"jobs": len(jobs), "groups": len(groups)})
         return results
 
     def _compact_batched(self, group_imgs, *, bucket, bottom_level,
@@ -482,6 +499,7 @@ class DeviceCompactionEngine:
         self.batch_jobs += n_jobs
         self.max_batch_jobs = max(self.max_batch_jobs, n_jobs)
         t_exec0 = time.perf_counter()
+        t_exec0_ns = time.perf_counter_ns()
         outs = self.executor.compact_many(staged, bottom_level=bottom_level,
                                           pad_blocks=bucket)
         outs = [(SSTImage(*(np.asarray(a) for a in out)), s)
@@ -505,6 +523,16 @@ class DeviceCompactionEngine:
                 bucket * self.geom.block_kvs, self.geom.key_lanes + 2,
                 n_runs, self.executor.sort_mode)
             results.append((out, stats))
+        if self.tracer.enabled:
+            self.tracer.complete("compact.batch_launch", t_exec0_ns,
+                                 int(exec_wall * 1e9),
+                                 args={"jobs": n_jobs, "bucket": bucket})
+            self._trace_modeled_phases(
+                t_exec0_ns, exec_wall,
+                sum(s.device_seconds for _, s in results),
+                sum(s.sort_seconds for _, s in results),
+                sum(s.bytes_in for _, s in results),
+                sum(s.bytes_out for _, s in results))
         return results
 
     def _compact_staged(self, imgs, real_blocks, *, bottom_level, t0):
@@ -528,6 +556,7 @@ class DeviceCompactionEngine:
         # wall time is NOT host coordination work (the roofline model
         # supplies the accelerator time) -- time it separately
         t_exec0 = time.perf_counter()
+        t_exec0_ns = time.perf_counter_ns()
         out, s = self.executor.compact(imgs, bottom_level=bottom_level,
                                        pad_blocks=bucket)
         out = SSTImage(*(np.asarray(a) for a in out))
@@ -546,7 +575,41 @@ class DeviceCompactionEngine:
         stats.sort_seconds = model_sort_seconds(
             bucket * self.geom.block_kvs, self.geom.key_lanes + 2,
             n_runs, self.executor.sort_mode)
+        if self.tracer.enabled:
+            self.tracer.complete("compact.execute", t_exec0_ns,
+                                 int(exec_wall * 1e9),
+                                 args={"jobs": 1, "bucket": bucket})
+            self._trace_modeled_phases(
+                t_exec0_ns, exec_wall, stats.device_seconds,
+                stats.sort_seconds, stats.bytes_in, stats.bytes_out)
         return out, stats
+
+    def _trace_modeled_phases(self, t0_ns: int, wall_s: float,
+                              device_s: float, sort_s: float,
+                              bytes_in: int, bytes_out: int):
+        """Nest the roofline-modeled device phases inside the measured
+        launch span: CRC verify -> merge phase 2 -> SST format.  The
+        jitted pipeline call stands in for the accelerator, so the
+        child durations come from the model (their args carry
+        ``modeled: True``), split pro-rata by I/O share and scaled down
+        when the model total exceeds the measured wall so the nesting
+        stays well-formed."""
+        tr = self.tracer
+        io = bytes_in + bytes_out
+        rest = max(device_s - sort_s, 0.0)
+        crc = rest * (bytes_in / io) if io else 0.0
+        phases = (("compact.crc_verify", crc),
+                  ("compact.merge_phase2", max(sort_s, 0.0)),
+                  ("compact.format", rest - crc))
+        total = sum(d for _, d in phases)
+        if total <= 0.0:
+            return
+        scale = min(1.0, wall_s / total)
+        cur = t0_ns
+        for name, d in phases:
+            dur = int(d * scale * 1e9)
+            tr.complete(name, cur, dur, args={"modeled": True})
+            cur += dur
 
     def build_image(self, keys, meta, vals, n_blocks=None) -> SSTImage:
         import jax.numpy as jnp

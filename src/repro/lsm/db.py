@@ -37,6 +37,8 @@ from repro.lsm import memtable, sstable, wal
 from repro.lsm.memtable import ImmutableMemTable
 from repro.lsm.sstable import FileMeta, TableCache
 from repro.lsm.version import VersionEdit, VersionSet
+from repro.obs.metrics import MetricsRegistry
+from repro.obs.trace import NULL_TRACER
 
 
 @dataclasses.dataclass
@@ -56,10 +58,21 @@ class DBConfig:
     async_compaction: bool = False  # non-blocking writes + bg flush/compact
     flush_workers: int = 1          # image builds overlap; installs ordered
     max_pending_memtables: int = 4  # immutable-queue depth before stalling
+    metrics: object | None = None   # obs.MetricsRegistry (None -> private
+    #   registry; pass obs.NULL_REGISTRY to opt out of instrumentation)
+    tracer: object | None = None    # obs.Tracer (None -> NULL_TRACER)
 
 
 @dataclasses.dataclass
 class DBStats:
+    """Point-in-time statistics snapshot.
+
+    The live counters behind these fields are atomic ``obs`` registry
+    counters (``lsm.<field>``, labeled by shard when the DB is part of a
+    ``ShardedDB``); ``LsmDB.stats`` materializes a snapshot on access,
+    so this stays the stable reporting API while increments from
+    background flush/compaction threads are race-free."""
+
     puts: int = 0
     gets: int = 0
     deletes: int = 0
@@ -87,17 +100,22 @@ class DBStats:
 
 def make_engine(cfg: DBConfig):
     """Build the compaction engine a ``DBConfig`` describes (shared by
-    ``LsmDB`` and ``ShardedDB``)."""
+    ``LsmDB`` and ``ShardedDB``).  The engine inherits ``cfg.tracer`` so
+    compaction-phase spans (CRC verify, merge, format) land in the same
+    trace as the store's."""
     if cfg.engine == "device":
-        return ce.DeviceCompactionEngine(cfg.geom, sort_mode=cfg.sort_mode)
+        return ce.DeviceCompactionEngine(cfg.geom, sort_mode=cfg.sort_mode,
+                                         tracer=cfg.tracer)
     if cfg.engine == "cpu":
-        return ce.CpuCompactionEngine(cfg.geom, threads=cfg.threads)
+        return ce.CpuCompactionEngine(cfg.geom, threads=cfg.threads,
+                                      tracer=cfg.tracer)
     raise ValueError(f"unknown engine {cfg.engine!r}")
 
 
 class LsmDB:
     def __init__(self, path: str, cfg: DBConfig | None = None, *,
-                 engine=None, compaction_sink=None):
+                 engine=None, compaction_sink=None, metrics=None,
+                 tracer=None, metric_labels=None):
         """``engine``: inject a (possibly shared) compaction engine instead
         of building one from ``cfg`` -- ``ShardedDB`` passes one engine to
         every shard so batched cross-shard launches share a jit cache.
@@ -105,6 +123,9 @@ class LsmDB:
         itself; it calls ``compaction_sink(self)`` whenever it has
         compaction work, and the sink owner drives ``pick_compaction`` /
         ``apply_compaction`` (see ``core.background.GlobalCompactionQueue``).
+        ``metrics``/``tracer``/``metric_labels``: observability injection
+        (``ShardedDB`` shares one registry + tracer across shards, with a
+        per-shard ``shard=i`` label); they win over the ``cfg`` fields.
         """
         self.path = path
         self.cfg = cfg or DBConfig()
@@ -119,7 +140,7 @@ class LsmDB:
         self.cache = TableCache(self.cfg.table_cache)
         self.mem = memtable.MemTable()
         self.imm: list[ImmutableMemTable] = []
-        self.stats = DBStats()
+        self._init_obs(metrics, tracer, metric_labels)
         self._owns_engine = engine is None
         self._compaction_sink = compaction_sink
         self.engine = engine if engine is not None else self._make_engine()
@@ -144,8 +165,57 @@ class LsmDB:
         else:
             self._flush_exec = self._compact_exec = None
 
+    def _init_obs(self, metrics, tracer, metric_labels):
+        """Registry counters supersede the old ad-hoc ``DBStats`` fields:
+        every mutation below goes through an atomic counter (safe from
+        flush workers and the compaction drainer without the DB lock) and
+        ``self.stats`` snapshots them back into a ``DBStats``."""
+        if metrics is None:
+            metrics = self.cfg.metrics
+        self.metrics = metrics if metrics is not None else MetricsRegistry()
+        t = tracer if tracer is not None else self.cfg.tracer
+        self.tracer = t if t is not None else NULL_TRACER
+        labels = dict(metric_labels or {})
+        self._span_args = labels or None
+        # per-shard counter-track suffix so Perfetto draws one stepped
+        # track per shard instead of interleaving samples on one
+        self._track = "".join(f"[{k}={v}]" for k, v in sorted(labels.items()))
+        self._c = {f.name: self.metrics.counter(f"lsm.{f.name}", **labels)
+                   for f in dataclasses.fields(DBStats)}
+        self._h_put = self.metrics.histogram("lsm.op.latency_us",
+                                             op="put", **labels)
+        self._h_get = self.metrics.histogram("lsm.op.latency_us",
+                                             op="get", **labels)
+        self._g_imm = self.metrics.gauge("lsm.imm_queue.depth", **labels)
+        self._g_debt = self.metrics.gauge("lsm.compaction.debt", **labels)
+
+    @property
+    def stats(self) -> DBStats:
+        """Point-in-time ``DBStats`` snapshot of the registry counters."""
+        return DBStats(**{
+            f.name: (float(v) if isinstance(f.default, float) else int(v))
+            for f in dataclasses.fields(DBStats)
+            for v in (self._c[f.name].value,)})
+
+    def _sample_pressure_locked(self):
+        """Gauge the write-pressure signals (immutable-queue depth +
+        compaction debt) onto the registry and, when tracing, onto
+        Perfetto counter tracks.  Called on state transitions."""
+        depth = len(self.imm)
+        debt = self.scheduler.debt(self.versions.current)
+        self._g_imm.set(depth)
+        self._g_debt.set(debt)
+        tr = self.tracer
+        if tr.enabled:
+            tr.counter("lsm.imm_queue.depth" + self._track, depth)
+            tr.counter("lsm.compaction.debt" + self._track, round(debt, 3))
+
     def _make_engine(self):
-        return make_engine(self.cfg)
+        eng = make_engine(self.cfg)
+        # a tracer injected via the LsmDB kwarg (not cfg) must still reach
+        # the owned engine, so compaction-phase spans land in the trace
+        eng.tracer = self.tracer
+        return eng
 
     def _replay_wal(self):
         """Replay rotated WAL segments (oldest first), then the active WAL.
@@ -175,20 +245,28 @@ class LsmDB:
             raise ValueError("keys must be non-empty and not end with NUL "
                              "(fixed-width key format)")
         assert len(value) <= self.geom.value_bytes - 4
+        t0 = time.perf_counter_ns()
         with self._lock:
             seq = self._next_seq()
             self._wal.append(wal.PUT, seq, key, value)
             self.mem.put(key, seq, value)
-            self.stats.puts += 1
             self._maybe_flush()
+        # hot path: an atomic counter bump and a lock-free histogram
+        # append (drained lazily) -- see tests/test_obs.py overhead check
+        dt = time.perf_counter_ns() - t0
+        self._c["puts"].inc()
+        self._h_put.pend(dt / 1000.0)
+        tr = self.tracer
+        if tr.enabled:
+            tr.complete("db.put", t0, dt)
 
     def delete(self, key: bytes):
         with self._lock:
             seq = self._next_seq()
             self._wal.append(wal.DELETE, seq, key)
             self.mem.delete(key, seq)
-            self.stats.deletes += 1
             self._maybe_flush()
+        self._c["deletes"].inc()
 
     def _next_seq(self) -> int:
         self.versions.last_seq += 1
@@ -214,14 +292,25 @@ class LsmDB:
         if self._bg_error is not None:
             raise IOError("writes halted: a background flush failed "
                           f"earlier: {self._bg_error!r}")
+        tr = self.tracer
         while len(self.imm) >= self.cfg.max_pending_memtables:
-            self.stats.write_stalls += 1
-            if not self._imm_cv.wait(timeout=60.0):
+            self._c["write_stalls"].inc()
+            self._sample_pressure_locked()
+            t_stall = time.perf_counter_ns()
+            ok = self._imm_cv.wait(timeout=60.0)
+            if tr.enabled:
+                tr.complete("write_stall", t_stall,
+                            time.perf_counter_ns() - t_stall,
+                            args={"cause": "imm_queue_full",
+                                  "depth": len(self.imm),
+                                  **(self._span_args or {})})
+            if not ok:
                 raise IOError("write stalled >60s: immutable queue not "
                               "draining (background flush dead?)")
             if self._bg_error is not None:
                 raise IOError("writes halted: a background flush failed "
                               f"while stalled: {self._bg_error!r}")
+        t_rot = time.perf_counter_ns()
         self._wal.close()
         self._wal_seg_no += 1
         seg = os.path.join(self.path, f"wal-{self._wal_seg_no:06d}.log")
@@ -234,6 +323,11 @@ class LsmDB:
         self.imm.append(entry)
         self.mem = memtable.MemTable()
         self._wal = wal.WALWriter(self._wal_path, sync=self.cfg.sync_wal)
+        self._sample_pressure_locked()
+        if tr.enabled:
+            tr.complete("memtable.rotate", t_rot,
+                        time.perf_counter_ns() - t_rot,
+                        args=self._span_args)
         self._flush_exec.submit(self._background_flush, entry)
 
     def _set_bg_error(self, err: BaseException):
@@ -247,11 +341,12 @@ class LsmDB:
     def _background_flush(self, entry: ImmutableMemTable):
         t0 = time.perf_counter()
         try:
-            entries = entry.table.sorted_entries()
-            img = None
-            if entries:
-                keys, meta, vals = self._pack_entries(entries)
-                img = self.engine.build_image(keys, meta, vals)
+            with self.tracer.span("flush.build", **(self._span_args or {})):
+                entries = entry.table.sorted_entries()
+                img = None
+                if entries:
+                    keys, meta, vals = self._pack_entries(entries)
+                    img = self.engine.build_image(keys, meta, vals)
         except BaseException as e:
             # halt the flush pipeline (RocksDB-style bg_error): a younger
             # memtable must NOT install beneath this still-queued older
@@ -273,6 +368,7 @@ class LsmDB:
                 raise IOError(
                     "flush halted: earlier background flush failed: "
                     f"{self._bg_error!r}")
+            t_inst = time.perf_counter_ns()
             edit = VersionEdit()
             if img is not None:
                 self._install_ssts(img, level=0, edit=edit)  # files on disk
@@ -280,9 +376,14 @@ class LsmDB:
                 if img is not None:
                     self._log_edit(edit)
                 self.imm.remove(entry)
-                self.stats.flushes += 1
-                self.stats.flush_host_seconds += time.perf_counter() - t0
                 self._imm_cv.notify_all()
+                self._sample_pressure_locked()
+            self._c["flushes"].inc()
+            self._c["flush_host_seconds"].add(time.perf_counter() - t0)
+            if self.tracer.enabled:
+                self.tracer.complete(
+                    "flush.install_l0", t_inst,
+                    time.perf_counter_ns() - t_inst, args=self._span_args)
             # WAL segments die inside the sequenced region: an older
             # memtable's segments are always unlinked before a newer
             # one's, so a crash can never leave old WAL data that would
@@ -316,7 +417,16 @@ class LsmDB:
 
     def get(self, key: bytes):
         """value bytes, or None if absent / deleted."""
-        self.stats.gets += 1
+        t0 = time.perf_counter_ns()
+        try:
+            return self._get_inner(key)
+        finally:
+            # gets used to bump a plain field with no lock at all (get is
+            # lock-free by design); the registry counter is atomic
+            self._c["gets"].inc()
+            self._h_get.pend((time.perf_counter_ns() - t0) / 1000.0)
+
+    def _get_inner(self, key: bytes):
         err = None
         for _ in range(8):
             # lock-free snapshot.  Safe because writers publish in the
@@ -368,7 +478,7 @@ class LsmDB:
                                         probe[None, None, :],
                                         self.geom.bloom_probes)
                 if not bool(hit[0, 0]):
-                    self.stats.bloom_negative_skips += 1
+                    self._c["bloom_negative_skips"].inc()
             return False, None
         if not tbl.is_value[i]:
             return True, None
@@ -433,20 +543,24 @@ class LsmDB:
             if len(self.mem) == 0:
                 return
             t0 = time.perf_counter()
-            keys, meta, vals = self._pack_entries(self.mem.sorted_entries())
-            img = self.engine.build_image(keys, meta, vals)
-            self._install_ssts(img, level=0)
-            self.mem = memtable.MemTable()
-            self._wal.close()
-            for p in self._active_extra_wals + [self._wal_path]:
-                try:
-                    os.remove(p)
-                except FileNotFoundError:
-                    pass
-            self._active_extra_wals = []
-            self._wal = wal.WALWriter(self._wal_path, sync=self.cfg.sync_wal)
-            self.stats.flushes += 1
-            self.stats.flush_host_seconds += time.perf_counter() - t0
+            with self.tracer.span("flush.sync", **(self._span_args or {})):
+                keys, meta, vals = self._pack_entries(
+                    self.mem.sorted_entries())
+                img = self.engine.build_image(keys, meta, vals)
+                self._install_ssts(img, level=0)
+                self.mem = memtable.MemTable()
+                self._wal.close()
+                for p in self._active_extra_wals + [self._wal_path]:
+                    try:
+                        os.remove(p)
+                    except FileNotFoundError:
+                        pass
+                self._active_extra_wals = []
+                self._wal = wal.WALWriter(self._wal_path,
+                                          sync=self.cfg.sync_wal)
+            self._c["flushes"].inc()
+            self._c["flush_host_seconds"].add(time.perf_counter() - t0)
+            self._sample_pressure_locked()
 
     def _install_ssts(self, img: SSTImage, level: int,
                       edit: VersionEdit | None = None) -> list[FileMeta]:
@@ -577,7 +691,8 @@ class LsmDB:
         """Pick the next compaction job (advances the round-robin pointer).
         External coordinators (``GlobalCompactionQueue``) pair this with
         ``apply_trivial_move`` / ``apply_compaction``."""
-        with self._lock:
+        with self._lock, \
+                self.tracer.span("compact.pick", **(self._span_args or {})):
             return self.scheduler.pick(self.versions.current)
 
     @staticmethod
@@ -587,13 +702,16 @@ class LsmDB:
 
     def apply_trivial_move(self, job: CompactionJob):
         fm = job.inputs_lo[0]
-        with self._lock:
+        with self._lock, \
+                self.tracer.span("compact.trivial_move", level=job.level,
+                                 **(self._span_args or {})):
             edit = VersionEdit(
                 added=[(job.level + 1, fm)],
                 deleted=[(job.level, fm.file_no)],
                 compact_pointer=self._pointer_edit(job.level))
             self.versions.log_and_apply(edit)
-            self.stats.trivial_moves += 1
+            self._sample_pressure_locked()
+        self._c["trivial_moves"].inc()
 
     def apply_compaction(self, job: CompactionJob, out: SSTImage, es):
         """Install a compaction result computed by the engine: verify the
@@ -609,22 +727,25 @@ class LsmDB:
             deleted=[(job.level, f.file_no) for f in job.inputs_lo] +
                     [(job.level + 1, f.file_no) for f in job.inputs_hi],
             compact_pointer=self._pointer_edit(job.level))
-        self._install_ssts(out, level=job.level + 1, edit=edit)
-        with self._lock:
-            self._log_edit(edit)
-            for f in job.all_inputs:
-                self.cache.drop(f.file_no)
-            s = self.stats
-            s.compactions += 1
-            s.compact_bytes_in += es.bytes_in
-            s.compact_bytes_out += es.bytes_out
-            s.compact_entries_in += es.n_input
-            s.compact_entries_dropped += es.n_dropped
-            s.compact_host_seconds += es.host_seconds
-            s.compact_device_seconds += es.device_seconds
-            s.compact_sort_seconds += es.sort_seconds
-            if getattr(es, "batched", False):
-                s.batched_compactions += 1
+        with self.tracer.span("compact.install", level=job.level,
+                              **(self._span_args or {})):
+            self._install_ssts(out, level=job.level + 1, edit=edit)
+            with self._lock:
+                self._log_edit(edit)
+                for f in job.all_inputs:
+                    self.cache.drop(f.file_no)
+                self._sample_pressure_locked()
+        c = self._c
+        c["compactions"].inc()
+        c["compact_bytes_in"].inc(es.bytes_in)
+        c["compact_bytes_out"].inc(es.bytes_out)
+        c["compact_entries_in"].inc(es.n_input)
+        c["compact_entries_dropped"].inc(es.n_dropped)
+        c["compact_host_seconds"].add(es.host_seconds)
+        c["compact_device_seconds"].add(es.device_seconds)
+        c["compact_sort_seconds"].add(es.sort_seconds)
+        if getattr(es, "batched", False):
+            c["batched_compactions"].inc()
         for f in job.all_inputs:
             try:
                 os.remove(f.path)
@@ -636,9 +757,12 @@ class LsmDB:
             self.apply_trivial_move(job)
             return
         paths = [f.path for f in job.all_inputs]
-        out, es = self.engine.compact_paths(paths,
-                                            bottom_level=job.bottom_level)
-        self.apply_compaction(job, out, es)
+        with self.tracer.span("compact.job", level=job.level,
+                              inputs=len(paths),
+                              **(self._span_args or {})):
+            out, es = self.engine.compact_paths(
+                paths, bottom_level=job.bottom_level)
+            self.apply_compaction(job, out, es)
 
     # ------------------------------------------------------------------
 

@@ -33,6 +33,8 @@ import os
 
 from repro.core.background import GlobalCompactionQueue
 from repro.lsm.db import DBConfig, DBStats, LsmDB, make_engine
+from repro.obs.metrics import MetricsRegistry
+from repro.obs.trace import NULL_TRACER
 
 SHARDS_FILE = "SHARDS.json"
 
@@ -90,15 +92,25 @@ class ShardedDB:
         self.boundaries = self._load_or_init_boundaries(
             shards, boundaries, sample_keys)
         self.n_shards = len(self.boundaries) + 1
+        # one registry + tracer shared by every shard, the queue, and the
+        # engine: per-shard series stay separable via the shard label
+        # while histograms stay bucket-mergeable for the combined view
+        self.metrics = (self.cfg.metrics if self.cfg.metrics is not None
+                        else MetricsRegistry())
+        self.tracer = (self.cfg.tracer if self.cfg.tracer is not None
+                       else NULL_TRACER)
         self.engine = make_engine(self.cfg)
-        self.queue = GlobalCompactionQueue(self.engine)
+        self.queue = GlobalCompactionQueue(self.engine, tracer=self.tracer,
+                                           metrics=self.metrics)
         self.shards = []
         try:
             for i in range(self.n_shards):
                 self.shards.append(
                     LsmDB(os.path.join(path, f"shard-{i:04d}"), self.cfg,
                           engine=self.engine,
-                          compaction_sink=self.queue.notify))
+                          compaction_sink=self.queue.notify,
+                          metrics=self.metrics, tracer=self.tracer,
+                          metric_labels={"shard": str(i)}))
         except BaseException:
             # a later shard failed to open (e.g. corrupt manifest): shut
             # down everything already started so a failed open does not

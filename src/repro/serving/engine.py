@@ -9,6 +9,8 @@ device-offloaded compaction reclaims superseded pages.
 
 from __future__ import annotations
 
+import time
+
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -16,15 +18,33 @@ import numpy as np
 from repro.lsm.db import LsmDB
 from repro.models import model
 from repro.models.config import ModelConfig
+from repro.obs.metrics import NULL_REGISTRY
+from repro.obs.trace import NULL_TRACER
 
 
 class ServeEngine:
     def __init__(self, cfg: ModelConfig, params, *, max_len: int = 256,
-                 page_store: LsmDB | None = None):
+                 page_store: LsmDB | None = None, metrics=None,
+                 tracer=None):
         self.cfg = cfg
         self.params = params
         self.max_len = max_len
         self.store = page_store
+        # default to the page store's registry/tracer so serving spans
+        # land in the same trace as the store's flush/compaction spans
+        if metrics is None:
+            metrics = getattr(page_store, "metrics", None)
+        if tracer is None:
+            tracer = getattr(page_store, "tracer", None)
+        self.metrics = metrics if metrics is not None else NULL_REGISTRY
+        self.tracer = tracer if tracer is not None else NULL_TRACER
+        self._h_gen = self.metrics.histogram(
+            "serve.op.latency_us", op="generate",
+            help="serving op latency (us)")
+        self._h_out = self.metrics.histogram("serve.op.latency_us",
+                                             op="page_out")
+        self._h_in = self.metrics.histogram("serve.op.latency_us",
+                                            op="page_in")
         self._decode = jax.jit(
             lambda p, c, t, pos: model.decode_step(p, c, t, pos, cfg))
 
@@ -40,6 +60,15 @@ class ServeEngine:
         an uninterrupted run would have gone.  (Decoding it eagerly would
         bake its KV entry into the cache; a later resume would then write
         a duplicate entry at the next position and diverge.)"""
+        t0 = time.perf_counter_ns()
+        with self.tracer.span("serve.generate",
+                              batch=int(np.asarray(prompts).shape[0]),
+                              max_new=max_new):
+            out = self._generate_inner(prompts, max_new)
+        self._h_gen.pend((time.perf_counter_ns() - t0) / 1000.0)
+        return out
+
+    def _generate_inner(self, prompts, max_new: int):
         prompts = jnp.asarray(prompts, jnp.int32)
         logit, cache, pos = model.prefill(
             self.params, {"tokens": prompts}, self.cfg, self.max_len)
@@ -66,6 +95,13 @@ class ServeEngine:
         """Page the session KV cache into the LSM store.  Returns the
         number of KV records written."""
         assert self.store is not None, "no page store configured"
+        t0 = time.perf_counter_ns()
+        with self.tracer.span("serve.page_out", session=session):
+            count = self._save_session_inner(session, cache, pos)
+        self._h_out.pend((time.perf_counter_ns() - t0) / 1000.0)
+        return count
+
+    def _save_session_inner(self, session: str, cache, pos) -> int:
         leaves, treedef = jax.tree.flatten((cache, pos))
         blobs = []
         for leaf in leaves:
@@ -89,6 +125,13 @@ class ServeEngine:
 
     def load_session(self, session: str):
         assert self.store is not None
+        t0 = time.perf_counter_ns()
+        with self.tracer.span("serve.page_in", session=session):
+            out = self._load_session_inner(session)
+        self._h_in.pend((time.perf_counter_ns() - t0) / 1000.0)
+        return out
+
+    def _load_session_inner(self, session: str):
         import json
         head = self.store.get(self._page_key(session, 0))
         if head is None:
