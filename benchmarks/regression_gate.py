@@ -36,22 +36,56 @@ for _p in (_ROOT, os.path.join(_ROOT, "src")):
         sys.path.insert(0, _p)
 
 
+# a zipfian read working set this small must live almost entirely in the
+# block cache; a hit rate below this floor means the cache (or its
+# counters) broke, regardless of how fast the machine is
+MIN_SMOKE_HIT_RATE = 0.5
+
+
 def _ycsb_rows() -> dict:
-    """End-to-end YCSB smoke row for the gate: get tail latency walks the
-    full read path (memtable, immutable queue, L0 newest-first, leveled
-    binary search) -- a regression surface the kernel microbenches cannot
-    see.  Sync cpu engine, tiny store, so it adds ~1s to the emit step."""
+    """End-to-end YCSB smoke rows for the gate.
+
+    ``ycsb.get.p99_cpu_smoke``: scalar get tail latency walks the full
+    read path (memtable, immutable queue, L0 newest-first, leveled binary
+    search) -- a regression surface the kernel microbenches cannot see.
+
+    ``ycsb.multi_get.p99_cpu_smoke``: the batched read path (stacked
+    bloom prune + stacked search/gather) on a zipfian YCSB-C smoke; also
+    enforces correctness gates directly (batched results must be
+    bit-identical to scalar, and the block-cache hit rate on the zipfian
+    replay must clear ``MIN_SMOKE_HIT_RATE`` -- a hit rate of ~0 means
+    the cache is broken and every 'fast' number below is a lie).
+
+    Sync cpu engine, tiny stores, so this adds a few seconds to emit."""
     import shutil
 
-    from benchmarks.ycsb_bench import measure_latency
+    from benchmarks.ycsb_bench import measure_latency, measure_multi_get
     db, rep = measure_latency("cpu", async_mode=False, records=120,
                               operations=240, value_size=64)
     db.close()
     shutil.rmtree(rep["path"], ignore_errors=True)
+    mg = measure_multi_get("cpu", records=120, operations=240, batch=32,
+                           value_size=64, workload="C",
+                           distribution="zipfian")
+    if mg["mismatches"]:
+        raise AssertionError(
+            f"multi_get smoke: {mg['mismatches']} results differ from "
+            "scalar get -- batched read path is wrong, not slow")
+    if mg["block_cache_hit_rate"] < MIN_SMOKE_HIT_RATE:
+        raise AssertionError(
+            f"multi_get smoke: block-cache hit rate "
+            f"{mg['block_cache_hit_rate']:.1%} below the "
+            f"{MIN_SMOKE_HIT_RATE:.0%} floor on a zipfian working set "
+            "that fits in cache -- the cache is not caching")
     return {
         "ycsb.get.p99_cpu_smoke": {
             "us": rep["get_percentiles_us"][99.0],
             "derived": "records=120;ops=240;value=64;sync",
+        },
+        "ycsb.multi_get.p99_cpu_smoke": {
+            "us": mg["batched_perkey_percentiles_us"][99.0],
+            "derived": (f"records=120;ops=240;value=64;batch=32;C;zipfian;"
+                        f"hit_rate={mg['block_cache_hit_rate']:.3f}"),
         },
     }
 

@@ -140,9 +140,11 @@ def percentiles(lat_us, qs=(50.0, 99.0, 99.9)) -> dict[float, float]:
 def measure_latency(engine: str, *, async_mode: bool, records: int,
                     operations: int, value_size: int = 128, seed: int = 42,
                     flush_workers: int = 2, path: str | None = None,
-                    sort_mode: str = "merge", metrics=None,
-                    tracer=None) -> tuple[LsmDB, dict]:
-    """Run load + YCSB-A against one store; record every op's latency.
+                    sort_mode: str = "merge", metrics=None, tracer=None,
+                    workload: str = "A", distribution: str | None = None
+                    ) -> tuple[LsmDB, dict]:
+    """Run load + one YCSB workload (A/B/C/D) against one store; record
+    every op's latency.
 
     Returns the still-open DB (drained via ``wait_idle``) plus a report
     with p50/p99/p99.9 split by op type.  Caller closes the DB.
@@ -169,8 +171,11 @@ def measure_latency(engine: str, *, async_mode: bool, records: int,
         h_put = metrics.histogram("ycsb.op.latency_us", op="put",
                                   help="bench-measured op latency (us)")
         h_get = metrics.histogram("ycsb.op.latency_us", op="get")
-    spec = WorkloadSpec.ycsb_a(records=records, operations=operations,
-                               value_size=value_size, seed=seed)
+    kw = dict(records=records, operations=operations,
+              value_size=value_size, seed=seed)
+    if distribution is not None:
+        kw["distribution"] = distribution
+    spec = WorkloadSpec.named(workload, **kw)
     wl = YCSBWorkload(spec)
     read_lat, write_lat = [], []
     t_run0 = time.perf_counter()
@@ -180,7 +185,7 @@ def measure_latency(engine: str, *, async_mode: bool, records: int,
                 t0 = time.perf_counter()
                 if op == "read":
                     db.get(key)
-                else:
+                else:   # update and (workload D) insert are both puts
                     db.put(key, val)
                 dt_us = (time.perf_counter() - t0) * 1e6
                 if op == "read":
@@ -204,6 +209,7 @@ def measure_latency(engine: str, *, async_mode: bool, records: int,
         raise
     report = {
         "engine": engine, "mode": "async" if async_mode else "sync",
+        "workload": spec.name, "distribution": spec.distribution,
         "put_percentiles_us": percentiles(write_lat),
         "get_percentiles_us": percentiles(read_lat),
         "ops_per_sec": (len(read_lat) + len(write_lat)) / t_ops,
@@ -214,6 +220,109 @@ def measure_latency(engine: str, *, async_mode: bool, records: int,
         "path": path, "own_path": own_path, "records": records,
     }
     return db, report
+
+
+def measure_multi_get(engine: str, *, records: int, operations: int,
+                      batch: int, value_size: int = 128, seed: int = 42,
+                      workload: str = "C", distribution: str = "zipfian",
+                      sort_mode: str = "merge", metrics=None,
+                      tracer=None) -> dict:
+    """Batched vs scalar read comparison on one store.
+
+    Loads the records, applies the workload's writes, then replays the
+    *same deterministic read sequence* twice: once as scalar ``get``
+    calls, once as ``multi_get`` batches of ``batch`` keys.  Both passes
+    run against a warmed block cache (an untimed warmup pass touches
+    every read key first) so the comparison isolates per-op dispatch +
+    search cost, not first-touch decode.  Verifies bit-identity between
+    the passes; reports per-key p50/p99 for both, per-batch percentiles,
+    and the block-cache hit rate as a first-class metric."""
+    path = tempfile.mkdtemp(prefix=f"mget-{engine}-{batch}-")
+    db = LsmDB(path, DBConfig(
+        geom=bench_geometry(value_size), engine=engine,
+        sort_mode=sort_mode, memtable_bytes=8 * 1024,
+        scheduler=SchedulerConfig(l0_trigger=4, base_bytes=128 * 1024),
+        metrics=metrics, tracer=tracer))
+    spec = WorkloadSpec.named(workload, records=records,
+                              operations=operations,
+                              value_size=value_size, seed=seed,
+                              distribution=distribution)
+    wl = YCSBWorkload(spec)
+    try:
+        for _, key, val in wl.load_ops():
+            db.put(key, val)
+        read_keys = []
+        for op, key, val in wl.run_ops():
+            if op == "read":
+                read_keys.append(key)
+            else:
+                db.put(key, val)
+        s0 = db.stats
+        for key in read_keys:       # untimed warmup: fill the block cache
+            db.get(key)
+        # one untimed batch warms the batched path's lazy one-time costs
+        # (jax platform query, module imports) out of the timed pass
+        db.multi_get(read_keys[:batch])
+        warm = db.stats
+        scalar_lat, scalar_out = [], []
+        for key in read_keys:
+            t0 = time.perf_counter()
+            scalar_out.append(db.get(key))
+            scalar_lat.append((time.perf_counter() - t0) * 1e6)
+        batch_lat, perkey_lat, batched_out = [], [], []
+        for i in range(0, len(read_keys), batch):
+            chunk = read_keys[i:i + batch]
+            t0 = time.perf_counter()
+            batched_out.extend(db.multi_get(chunk))
+            dt_us = (time.perf_counter() - t0) * 1e6
+            batch_lat.append(dt_us)
+            perkey_lat.extend([dt_us / len(chunk)] * len(chunk))
+        mismatches = sum(1 for a, b in zip(scalar_out, batched_out)
+                         if a != b)
+        s = db.stats
+        hits = s.block_cache_hits - s0.block_cache_hits
+        misses = s.block_cache_misses - s0.block_cache_misses
+        hit_rate = hits / max(1, hits + misses)
+        sp, bp = percentiles(scalar_lat), percentiles(perkey_lat)
+        return {
+            "engine": engine, "workload": spec.name,
+            "distribution": spec.distribution, "batch": batch,
+            "reads": len(read_keys),
+            "scalar_percentiles_us": sp,
+            "batched_perkey_percentiles_us": bp,
+            "batch_percentiles_us": percentiles(batch_lat),
+            "p99_speedup": sp[99.0] / max(bp[99.0], 1e-9),
+            "block_cache_hit_rate": hit_rate,
+            "block_cache_hits": hits, "block_cache_misses": misses,
+            "warmup_misses": (warm.block_cache_misses -
+                              s0.block_cache_misses),
+            "bloom_negative_skips": (s.bloom_negative_skips -
+                                     s0.bloom_negative_skips),
+            "multi_gets": s.multi_gets, "mismatches": mismatches,
+        }
+    finally:
+        db.close()
+        shutil.rmtree(path, ignore_errors=True)
+
+
+def _print_multi_get(rep):
+    sp = rep["scalar_percentiles_us"]
+    bp = rep["batched_perkey_percentiles_us"]
+    bt = rep["batch_percentiles_us"]
+    print(f"engine={rep['engine']} workload={rep['workload']} "
+          f"dist={rep['distribution']} reads={rep['reads']} "
+          f"batch={rep['batch']}")
+    print(f"  scalar get    p50/p99 = {sp[50.0]:.1f}/{sp[99.0]:.1f}us "
+          "per key")
+    print(f"  multi_get     p50/p99 = {bp[50.0]:.1f}/{bp[99.0]:.1f}us "
+          f"per key ({bt[50.0]:.1f}/{bt[99.0]:.1f}us per batch)")
+    print(f"  p99 speedup  {rep['p99_speedup']:.2f}x  "
+          f"block-cache hit rate {rep['block_cache_hit_rate']:.1%} "
+          f"({rep['block_cache_hits']} hits / "
+          f"{rep['block_cache_misses']} misses)  "
+          f"bloom skips {rep['bloom_negative_skips']}")
+    print(f"  scalar vs batched bit-identity over {rep['reads']} reads: "
+          f"{'OK' if rep['mismatches'] == 0 else str(rep['mismatches']) + ' MISMATCHES'}")
 
 
 def measure_sharded(engine: str, *, shards: int, records: int,
@@ -468,6 +577,21 @@ def main(argv=None):
                     help="multi-tenant mode: run a ShardedDB with N "
                          "range shards sharing one batching compaction "
                          "backend; reports aggregate + per-shard p99")
+    ap.add_argument("--workload", default="A",
+                    choices=["A", "B", "C", "D"],
+                    help="YCSB workload mix: A=50/50 update/read, "
+                         "B=95/5, C=read-only, D=read-latest+insert")
+    ap.add_argument("--multi-get", type=int, default=0, metavar="K",
+                    help="batched-read mode: replay the workload's reads "
+                         "as multi_get batches of K keys and report "
+                         "batched vs scalar get p50/p99 + block-cache "
+                         "hit rate")
+    ap.add_argument("--distribution", default=None,
+                    choices=["zipfian", "uniform", "latest"],
+                    help="request distribution (default: the workload's "
+                         "own -- zipfian for A/B/C, latest for D)")
+    ap.add_argument("--zipfian", action="store_true",
+                    help="shorthand for --distribution zipfian")
     ap.add_argument("--records", type=int, default=400)
     ap.add_argument("--operations", type=int, default=800)
     ap.add_argument("--value-size", type=int, default=128)
@@ -482,7 +606,19 @@ def main(argv=None):
                     help="write the metrics registry in Prometheus text "
                          "exposition format")
     args = ap.parse_args(argv)
+    if args.zipfian:
+        args.distribution = "zipfian"
     metrics, tracer = _make_obs(args)
+    if args.multi_get > 0:
+        rep = measure_multi_get(
+            args.engine, records=args.records, operations=args.operations,
+            batch=args.multi_get, value_size=args.value_size,
+            seed=args.seed, workload=args.workload,
+            distribution=args.distribution or "zipfian",
+            sort_mode=args.sort_mode, metrics=metrics, tracer=tracer)
+        _print_multi_get(rep)
+        _export_obs(args, metrics, tracer)
+        return 0 if rep["mismatches"] == 0 else 1
     if args.shards > 0:
         rep = measure_sharded(
             args.engine, shards=args.shards, records=args.records,
@@ -508,11 +644,13 @@ def main(argv=None):
         args.engine, async_mode=False, records=args.records,
         operations=args.operations, value_size=args.value_size,
         seed=args.seed, sort_mode=args.sort_mode, metrics=metrics,
-        tracer=tracer)
+        tracer=tracer, workload=args.workload,
+        distribution=args.distribution)
     db.close()
     shutil.rmtree(rep["path"], ignore_errors=True)
     p, g = rep["put_percentiles_us"], rep["get_percentiles_us"]
     print(f"engine={args.engine} mode=sync sort={args.sort_mode} "
+          f"workload={rep['workload']} dist={rep['distribution']} "
           f"put p50/p99/p99.9 = {p[50.0]:.1f}/{p[99.0]:.1f}/"
           f"{p[99.9]:.1f}us  get p50/p99 = {g[50.0]:.1f}/{g[99.0]:.1f}us  "
           f"{rep['ops_per_sec']:.0f} ops/s")

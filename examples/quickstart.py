@@ -50,6 +50,13 @@ def main():
     print("reading back ...")
     hits = sum(db.get(b"key%04d" % i) is not None for i in range(120))
     print(f"{hits} live keys; key0003 = {db.get(b'key0003')!r}")
+    # batched reads: K lookups -> one stacked bloom probe + one stacked
+    # search/gather launch, bit-identical to a get() loop
+    # (see docs/read_path.md)
+    batch = db.multi_get([b"key%04d" % i for i in range(8)])
+    print(f"multi_get(8 keys): {sum(v is not None for v in batch)} hits, "
+          f"block cache {db.stats.block_cache_hits} hits/"
+          f"{db.stats.block_cache_misses} misses")
     print("scan key0010..key0014:",
           [(k.decode(), v[:12]) for k, v in
            db.scan(b"key0010", b"key0015")])

@@ -1,10 +1,11 @@
 """YCSB workload generator (Cooper et al., SoCC'10) -- the paper's driver.
 
 Implements the load phase and workloads A (50/50 update/read, the paper's
-setting), B (95/5) and C (read-only) with a zipfian request distribution
-(Gray et al.'s rejection-free generator, as in the YCSB reference
-implementation).  Keys are 16 B (``user%012d``), values are configurable
-(the paper sweeps 128 B..1 KB).
+setting), B (95/5), C (read-only) and D (95/5 read-latest/insert) with
+zipfian (Gray et al.'s rejection-free generator, as in the YCSB reference
+implementation), uniform, and latest request distributions.  Keys are
+16 B (``user%012d``), values are configurable (the paper sweeps
+128 B..1 KB).
 """
 
 from __future__ import annotations
@@ -49,10 +50,11 @@ class WorkloadSpec:
     name: str = "A"
     read_fraction: float = 0.5
     update_fraction: float = 0.5
+    insert_fraction: float = 0.0    # workload D: new records mid-run
     records: int = 10_000
     operations: int = 10_000
     value_size: int = 256
-    distribution: str = "zipfian"   # "zipfian" | "uniform"
+    distribution: str = "zipfian"   # "zipfian" | "uniform" | "latest"
     seed: int = 42
 
     @classmethod
@@ -67,6 +69,23 @@ class WorkloadSpec:
     def ycsb_c(cls, **kw):
         return cls(name="C", read_fraction=1.0, update_fraction=0.0, **kw)
 
+    @classmethod
+    def ycsb_d(cls, **kw):
+        """Read latest: 95% reads skewed toward recent inserts, 5%
+        inserts of new records (YCSB's ``workloadd``)."""
+        kw.setdefault("distribution", "latest")
+        return cls(name="D", read_fraction=0.95, update_fraction=0.0,
+                   insert_fraction=0.05, **kw)
+
+    @classmethod
+    def named(cls, name: str, **kw) -> "WorkloadSpec":
+        ctor = {"A": cls.ycsb_a, "B": cls.ycsb_b,
+                "C": cls.ycsb_c, "D": cls.ycsb_d}.get(name.upper())
+        if ctor is None:
+            raise ValueError(f"unknown YCSB workload {name!r} "
+                             "(expected A, B, C or D)")
+        return ctor(**kw)
+
 
 def key_of(i: int) -> bytes:
     # fnv-scramble the id so the zipfian head is spread over the key space
@@ -79,10 +98,15 @@ class YCSBWorkload:
     def __init__(self, spec: WorkloadSpec):
         self.spec = spec
         self.rng = np.random.default_rng(spec.seed)
-        if spec.distribution == "zipfian":
+        if spec.distribution in ("zipfian", "latest"):
+            # "latest" draws a zipfian *offset from the newest record*
             self.chooser = ZipfianGenerator(spec.records, seed=spec.seed + 1)
-        else:
+        elif spec.distribution == "uniform":
             self.chooser = None
+        else:
+            raise ValueError(
+                f"unknown distribution {spec.distribution!r} "
+                "(expected zipfian, uniform or latest)")
 
     def _value(self, i: int) -> bytes:
         width = self.spec.value_size
@@ -95,16 +119,27 @@ class YCSBWorkload:
             yield "insert", key_of(i), self._value(i)
 
     def run_ops(self) -> Iterator[tuple[str, bytes, bytes | None]]:
-        """The transaction phase: reads + updates per the workload mix."""
+        """The transaction phase: reads, updates and (workload D) inserts
+        per the workload mix.  With the ``latest`` distribution the
+        record id is drawn as ``newest - zipf()`` so the skew tracks the
+        moving insert frontier, as in the YCSB reference."""
         spec = self.spec
+        n_records = spec.records     # grows as workload-D inserts land
         if self.chooser is not None:
-            ids = self.chooser.sample(spec.operations)
+            draws = self.chooser.sample(spec.operations)
         else:
-            ids = self.rng.integers(0, spec.records, spec.operations)
+            draws = self.rng.integers(0, spec.records, spec.operations)
         kinds = self.rng.random(spec.operations)
         for op_i in range(spec.operations):
-            key = key_of(int(ids[op_i]))
-            if kinds[op_i] < spec.read_fraction:
-                yield "read", key, None
+            if spec.distribution == "latest":
+                rid = max(0, n_records - 1 - int(draws[op_i]))
             else:
-                yield "update", key, self._value(op_i)
+                rid = int(draws[op_i])
+            kind = kinds[op_i]
+            if kind < spec.read_fraction:
+                yield "read", key_of(rid), None
+            elif kind < spec.read_fraction + spec.insert_fraction:
+                yield "insert", key_of(n_records), self._value(n_records)
+                n_records += 1
+            else:
+                yield "update", key_of(rid), self._value(op_i)

@@ -133,3 +133,57 @@ def bloom_query(filters: jax.Array, keys: jax.Array, *, n_probes: int,
         interpret=interpret,
     )(filters.astype(jnp.uint32), keys.astype(jnp.uint32))
     return out[:g, :q] != 0
+
+
+def _multi_probe_kernel(filters_ref, keys_ref, out_ref, *, n_probes,
+                        n_words):
+    filters = filters_ref[...]   # [TC, W]
+    keys = keys_ref[...]         # [TC, L]
+    h1, h2 = ref.bloom_hashes(keys)  # [TC]
+    m_bits = jnp.uint32(n_words * 32)
+    word_iota = jax.lax.broadcasted_iota(jnp.uint32,
+                                         (keys.shape[0], n_words), 1)
+    ok = jnp.ones(h1.shape, bool)
+    for i in range(n_probes):
+        pos = (h1 + jnp.uint32(i) * h2) % m_bits          # [TC]
+        widx = (pos >> jnp.uint32(5))[:, None]            # [TC, 1]
+        sel = jnp.where(word_iota == widx, filters, jnp.uint32(0))
+        word = jax.lax.reduce(sel, np.uint32(0), jax.lax.bitwise_or, (1,))
+        bit = (word >> (pos & jnp.uint32(31))) & jnp.uint32(1)
+        ok = ok & (bit == 1)
+    out_ref[...] = ok.astype(jnp.uint32)[:, None]
+
+
+@functools.partial(jax.jit, static_argnames=("n_probes", "cand_tile",
+                                             "interpret"))
+def multi_probe(filters: jax.Array, keys: jax.Array, *, n_probes: int,
+                cand_tile: int = 128,
+                interpret: bool | None = None) -> jax.Array:
+    """Pairwise membership probe: key row ``i`` against filter row ``i``.
+
+    The batched read path stacks one filter row per lookup candidate and
+    prunes the whole candidate set in a single launch.  ``filters``:
+    uint32 ``[C, W]``; ``keys``: uint32 ``[C, lanes]``.  Returns bool
+    ``[C]`` (True = maybe present)."""
+    if interpret is None:
+        interpret = common.default_interpret()
+    c, lanes = keys.shape
+    n_words = filters.shape[-1]
+    tc = min(cand_tile, c)
+    cp = common.round_up(c, tc)
+    if cp != c:   # zero filters -> padded rows report absent
+        filters = jnp.pad(filters, ((0, cp - c), (0, 0)))
+        keys = jnp.pad(keys, ((0, cp - c), (0, 0)))
+    out = pl.pallas_call(
+        functools.partial(_multi_probe_kernel, n_probes=n_probes,
+                          n_words=n_words),
+        grid=(cp // tc,),
+        in_specs=[
+            pl.BlockSpec((tc, n_words), lambda i: (i, 0)),
+            pl.BlockSpec((tc, lanes), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((tc, 1), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((cp, 1), jnp.uint32),
+        interpret=interpret,
+    )(filters.astype(jnp.uint32), keys.astype(jnp.uint32))
+    return out[:c, 0] != 0

@@ -1,0 +1,132 @@
+"""Batched point-lookup Pallas kernel (the read-path gather launch).
+
+LUDA's core observation -- per-key procedures are data-independent, so a
+wide launch fills the device -- applies to lookups exactly as it does to
+compactions.  ``multi_get`` stacks one *candidate* (query key, decoded SST
+block) pair per row and resolves every one in a single launch:
+
+* **search** -- per candidate, an unrolled binary search over the block's
+  ``K`` sorted key rows.  The row gather at each step is the same
+  TPU-friendly compare/select/OR-reduce used by the bloom kernels (a
+  dynamic row gather is pathological on the VPU); ``log2 K`` steps of
+  ``O(K * L)`` vector work, with K = keys per block (small by geometry).
+* **gather** -- one-hot select of the matched row's meta word and value
+  slot, masked by the found verdict.
+
+Same two-stage shape as ``merge_path.py``: a vectorized search producing
+positions, then a windowed gather -- here both stages fit one kernel
+because the window is a single block row.  Grid is 1-D over candidate
+tiles; VMEM per tile is ``TC * K * (L + Vw + 1)`` words, independent of
+the candidate count.
+
+Sentinel contract (matches ``merge_path.PAD_WORD``): block rows at or
+beyond ``nvalid`` must hold all-ones keys so the per-block order is total;
+padded candidate rows carry ``nvalid = 0`` and therefore report not-found.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+from repro.kernels import common
+
+PAD_WORD = jnp.uint32(0xFFFFFFFF)
+
+
+def _select_row(keys: jax.Array, onehot: jax.Array) -> jax.Array:
+    """Gather one ``[L]`` row per candidate: ``keys`` ``[TC, K, L]``,
+    ``onehot`` bool ``[TC, K]`` (exactly one hot) -> ``[TC, L]``."""
+    sel = jnp.where(onehot[..., None], keys, jnp.uint32(0))
+    return jax.lax.reduce(sel, np.uint32(0), jax.lax.bitwise_or, (1,))
+
+
+def _lookup_kernel(keys_ref, meta_ref, vals_ref, nvalid_ref, q_ref,
+                   found_ref, meta_out_ref, val_out_ref, *, n_kvs, lanes):
+    keys = keys_ref[...]            # [TC, K, L]
+    meta = meta_ref[...]            # [TC, K]
+    vals = vals_ref[...]            # [TC, K, Vw]
+    nvalid = nvalid_ref[...][:, 0]  # [TC]
+    q = q_ref[...]                  # [TC, L]
+    tc = keys.shape[0]
+    iota_k = jax.lax.broadcasted_iota(jnp.int32, (tc, n_kvs), 1)
+
+    lo = jnp.zeros((tc,), jnp.int32)
+    hi = jnp.full((tc,), n_kvs, jnp.int32)
+    for _ in range((n_kvs + 1).bit_length()):
+        go = lo < hi
+        mid = (lo + hi) >> 1          # always in [0, K) while go
+        row = _select_row(keys, iota_k == mid[:, None])
+        descend = common.lex_less(row, q, lanes)       # keys[mid] < q
+        lo = jnp.where(go & descend, mid + 1, lo)
+        hi = jnp.where(go & ~descend, mid, hi)
+
+    idx = jnp.clip(lo, 0, n_kvs - 1)
+    onehot = iota_k == idx[:, None]
+    hit = _select_row(keys, onehot)
+    eq = jnp.ones((tc,), bool)
+    for lane in range(lanes):
+        eq = eq & (hit[:, lane] == q[:, lane])
+    found = eq & (lo < nvalid)
+    m = jax.lax.reduce(jnp.where(onehot, meta, jnp.uint32(0)),
+                       np.uint32(0), jax.lax.bitwise_or, (1,))
+    v = _select_row(vals, onehot)
+    found_ref[...] = found.astype(jnp.uint32)[:, None]
+    meta_out_ref[...] = jnp.where(found, m, jnp.uint32(0))[:, None]
+    val_out_ref[...] = jnp.where(found[:, None], v, jnp.uint32(0))
+
+
+@functools.partial(jax.jit, static_argnames=("cand_tile", "interpret"))
+def lookup_blocks(keys: jax.Array, meta: jax.Array, vals: jax.Array,
+                  nvalid: jax.Array, queries: jax.Array, *,
+                  cand_tile: int = 8, interpret: bool | None = None
+                  ) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Resolve C stacked (query, block) candidates in one launch.
+
+    Shapes/contract as ``ref.lookup_blocks`` (rows >= ``nvalid`` must be
+    all-ones sentinels).  Returns ``(found bool [C], meta uint32 [C],
+    value uint32 [C, Vw])``, meta/value zeroed where not found."""
+    if interpret is None:
+        interpret = common.default_interpret()
+    C, K, L = keys.shape
+    Vw = vals.shape[-1]
+    tc = min(cand_tile, C)
+    Cp = common.round_up(C, tc)
+    if Cp != C:
+        pad = Cp - C
+        keys = jnp.pad(keys, ((0, pad), (0, 0), (0, 0)),
+                       constant_values=PAD_WORD)
+        meta = jnp.pad(meta, ((0, pad), (0, 0)))
+        vals = jnp.pad(vals, ((0, pad), (0, 0), (0, 0)))
+        nvalid = jnp.pad(nvalid, (0, pad))     # nvalid=0 -> never found
+        queries = jnp.pad(queries, ((0, pad), (0, 0)))
+    found, m, v = pl.pallas_call(
+        functools.partial(_lookup_kernel, n_kvs=K, lanes=L),
+        grid=(Cp // tc,),
+        in_specs=[
+            pl.BlockSpec((tc, K, L), lambda i: (i, 0, 0)),
+            pl.BlockSpec((tc, K), lambda i: (i, 0)),
+            pl.BlockSpec((tc, K, Vw), lambda i: (i, 0, 0)),
+            pl.BlockSpec((tc, 1), lambda i: (i, 0)),
+            pl.BlockSpec((tc, L), lambda i: (i, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((tc, 1), lambda i: (i, 0)),
+            pl.BlockSpec((tc, 1), lambda i: (i, 0)),
+            pl.BlockSpec((tc, Vw), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((Cp, 1), jnp.uint32),
+            jax.ShapeDtypeStruct((Cp, 1), jnp.uint32),
+            jax.ShapeDtypeStruct((Cp, Vw), jnp.uint32),
+        ],
+        interpret=interpret,
+    )(keys.astype(jnp.uint32), meta.astype(jnp.uint32),
+      vals.astype(jnp.uint32),
+      nvalid.astype(jnp.int32).reshape(Cp, 1),
+      queries.astype(jnp.uint32))
+    return found[:C, 0] != 0, m[:C, 0], v[:C]

@@ -18,9 +18,14 @@ import numpy as np
 from repro.kernels import bitonic_sort as _bitonic
 from repro.kernels import bloom as _bloom
 from repro.kernels import crc32 as _crc32
+from repro.kernels import lookup as _lookup
 from repro.kernels import merge_path as _merge_path
 from repro.kernels import prefix as _prefix
 from repro.kernels import ref
+
+_jit_bloom_multi_probe = jax.jit(ref.bloom_multi_probe,
+                                 static_argnames=("n_probes",))
+_jit_lookup_blocks = jax.jit(ref.lookup_blocks)
 
 _ON_TPU = None
 
@@ -69,6 +74,30 @@ def bloom_query(filters: jax.Array, keys: jax.Array, *,
     if _use_pallas(backend):
         return _bloom.bloom_query(filters, keys, n_probes=n_probes)
     return ref.bloom_query(filters, keys, n_probes=n_probes)
+
+
+def bloom_multi_probe(filters: jax.Array, keys: jax.Array, *,
+                      n_probes: int, backend: str = "auto") -> jax.Array:
+    """Pairwise probe (key row i vs filter row i): the multi_get candidate
+    prune.  ``filters`` uint32 ``[C, W]``, ``keys`` uint32 ``[C, L]`` ->
+    bool ``[C]``.  Callers pad C to a stable bucket to bound the jit
+    cache (see ``lsm.read``)."""
+    if _use_pallas(backend):
+        return _bloom.multi_probe(filters, keys, n_probes=n_probes)
+    return _jit_bloom_multi_probe(filters, keys, n_probes=n_probes)
+
+
+def lookup_blocks(keys: jax.Array, meta: jax.Array, vals: jax.Array,
+                  nvalid: jax.Array, queries: jax.Array, *,
+                  backend: str = "auto"
+                  ) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Batched binary-search/gather over stacked candidate blocks (query
+    row i searched in block i).  Contract as ``ref.lookup_blocks``: block
+    rows at or beyond ``nvalid`` must hold all-ones sentinel keys.
+    Returns ``(found [C], meta [C], value [C, Vw])``."""
+    if _use_pallas(backend):
+        return _lookup.lookup_blocks(keys, meta, vals, nvalid, queries)
+    return _jit_lookup_blocks(keys, meta, vals, nvalid, queries)
 
 
 def prefix_encode(keys: jax.Array, *, restart_interval: int = 16,

@@ -127,6 +127,17 @@ def bloom_query(filters: jax.Array, keys: jax.Array, *,
     return ok
 
 
+def bloom_multi_probe(filters: jax.Array, keys: jax.Array, *,
+                      n_probes: int) -> jax.Array:
+    """Pairwise membership probe: key row ``i`` against filter row ``i``.
+
+    The batched read path stacks one (per-SST, per-block-group) filter row
+    per lookup candidate, so a K-key multi_get prunes every candidate in a
+    single launch.  ``filters``: uint32 ``[C, W]``; ``keys``: uint32
+    ``[C, lanes]``.  Returns bool ``[C]`` (True = maybe present)."""
+    return bloom_query(filters, keys[:, None, :], n_probes=n_probes)[:, 0]
+
+
 # ---------------------------------------------------------------------------
 # Shared-key (prefix) encode  -- LevelDB block builder phase on device
 # ---------------------------------------------------------------------------
@@ -269,6 +280,43 @@ def merge_sorted(a: jax.Array, b: jax.Array) -> jax.Array:
     out = jnp.zeros((m + n, a.shape[1]), a.dtype)
     out = out.at[pos_a].set(a)
     return out.at[pos_b].set(b)
+
+
+def lookup_blocks(keys: jax.Array, meta: jax.Array, vals: jax.Array,
+                  nvalid: jax.Array, queries: jax.Array
+                  ) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Batched point lookup: query row ``i`` binary-searched in block ``i``.
+
+    ``keys``: uint32 ``[C, K, L]`` -- per-candidate decoded block keys,
+    sorted; rows at or beyond ``nvalid[i]`` MUST hold the all-ones sentinel
+    so order is total.  ``meta``: uint32 ``[C, K]``; ``vals``: uint32
+    ``[C, K, Vw]``; ``nvalid``: int32 ``[C]``; ``queries``: uint32
+    ``[C, L]``.
+
+    Returns ``(found bool [C], meta uint32 [C], value uint32 [C, Vw])``
+    with meta/value zeroed where not found.  The leftmost match is
+    returned, which (entries sorted key-asc, seq-desc) is the newest
+    version of the key in the block.
+    """
+    C, K, _ = keys.shape
+    lo = jnp.zeros((C,), jnp.int32)
+    hi = jnp.full((C,), K, jnp.int32)
+    for _ in range((K + 1).bit_length()):
+        go = lo < hi
+        mid = (lo + hi) >> 1
+        row = jnp.take_along_axis(
+            keys, jnp.clip(mid, 0, K - 1)[:, None, None], axis=1)[:, 0, :]
+        descend = _lex_less(row, queries)          # keys[mid] < q
+        lo = jnp.where(go & descend, mid + 1, lo)
+        hi = jnp.where(go & ~descend, mid, hi)
+    idx = jnp.clip(lo, 0, K - 1)
+    hit = jnp.take_along_axis(keys, idx[:, None, None], axis=1)[:, 0, :]
+    found = (hit == queries).all(axis=-1) & (lo < nvalid.astype(jnp.int32))
+    m = jnp.take_along_axis(meta, idx[:, None], axis=1)[:, 0]
+    v = jnp.take_along_axis(vals, idx[:, None, None], axis=1)[:, 0, :]
+    return (found,
+            jnp.where(found, m, jnp.uint32(0)),
+            jnp.where(found[:, None], v, jnp.uint32(0)))
 
 
 def merge_runs(rows: jax.Array, run_lens: tuple[int, ...]) -> jax.Array:

@@ -5,11 +5,63 @@ into: memtable + WAL + leveled SST files + versioned manifest, with
 pluggable compaction engines (``device`` = the paper's offload,
 ``cpu`` = the LevelDB-like baseline; ``threads`` models the RocksDB-like
 multithreaded baseline).
+
+The read surface is uniform across every level of the stack: ``LsmDB``,
+``ShardedDB`` and ``TableReader`` all expose ``get(key, opts=None)``,
+``multi_get(keys, opts=None)`` and ``scan(start, end, opts=None)`` taking
+the same frozen ``ReadOptions`` (see docs/read_path.md).
 """
+
+from __future__ import annotations
+
+import dataclasses
+
+
+@dataclasses.dataclass(frozen=True)
+class ReadOptions:
+    """Options shared by every read entry point (``get`` / ``multi_get`` /
+    ``scan`` on ``LsmDB``, ``ShardedDB`` and ``TableReader``).
+
+    * ``snapshot`` -- a read view from ``LsmDB.snapshot()`` /
+      ``ShardedDB.snapshot()``: pins the SST version and the immutable
+      memtable set so a multi-call read sequence observes one file set
+      (no mid-read compaction retries).  The *active* memtable stays
+      live -- this is a consistent view of immutable state, not MVCC
+      point-in-time isolation -- and files compacted away while a
+      snapshot is held raise ``FileNotFoundError`` instead of silently
+      re-reading a newer version.  ``None`` reads the latest state.
+    * ``fill_cache`` -- insert blocks decoded on behalf of this read into
+      the host block cache (disable for one-off scans so they cannot
+      evict the hot read-path working set; results are bit-identical
+      either way).
+    * ``verify_crc`` -- re-verify the per-block CRC when a block is
+      decoded.  The whole-file checksum is always verified at load time,
+      so this guards against post-load in-memory corruption only; default
+      off.
+    * ``backend`` -- kernel dispatch for the batched launches:
+      ``"auto"`` (Pallas on TPU, host numpy on CPU), ``"pallas"``,
+      ``"ref"`` (jnp oracle), or ``"host"`` (pure numpy, no device
+      dispatch).  All four are bit-identical.
+    """
+
+    snapshot: object | None = None
+    fill_cache: bool = True
+    verify_crc: bool = False
+    backend: str = "auto"
+
+
+#: Default options singleton (avoids per-get allocation on the hot path).
+DEFAULT_READ_OPTIONS = ReadOptions()
 
 
 def __getattr__(name):  # lazy: avoids core.scheduler <-> lsm.db cycle
-    if name in ("LsmDB", "DBConfig", "DBStats"):
+    if name in ("LsmDB", "DBConfig", "DBStats", "Snapshot"):
         from repro.lsm import db
         return getattr(db, name)
+    if name in ("ShardedDB", "ShardedSnapshot"):
+        from repro.lsm import sharded
+        return getattr(sharded, name)
+    if name in ("TableReader", "TableCache", "BlockCache"):
+        from repro.lsm import sstable
+        return getattr(sstable, name)
     raise AttributeError(name)

@@ -32,10 +32,13 @@ from repro.core.background import BackgroundExecutor, InstallSequencer
 from repro.core.formats import SSTGeometry, SSTImage
 from repro.core.scheduler import (CompactionJob, CompactionScheduler,
                                   SchedulerConfig)
+from repro.lsm import DEFAULT_READ_OPTIONS, ReadOptions
 from repro.lsm import cpu_engine as ce
-from repro.lsm import memtable, sstable, wal
+from repro.lsm import memtable
+from repro.lsm import read as lsm_read
+from repro.lsm import sstable, wal
 from repro.lsm.memtable import ImmutableMemTable
-from repro.lsm.sstable import FileMeta, TableCache
+from repro.lsm.sstable import BlockCache, FileMeta, TableCache
 from repro.lsm.version import VersionEdit, VersionSet
 from repro.obs.metrics import MetricsRegistry
 from repro.obs.trace import NULL_TRACER
@@ -53,6 +56,7 @@ class DBConfig:
     scheduler: SchedulerConfig = dataclasses.field(
         default_factory=SchedulerConfig)
     table_cache: int = 64
+    block_cache_blocks: int = 4096  # host LRU of decoded blocks (0 = off)
     sync_wal: bool = False
     auto_compact: bool = True
     async_compaction: bool = False  # non-blocking writes + bg flush/compact
@@ -75,6 +79,8 @@ class DBStats:
 
     puts: int = 0
     gets: int = 0
+    multi_gets: int = 0            # multi_get() calls
+    multi_get_keys: int = 0        # keys resolved through multi_get()
     deletes: int = 0
     flushes: int = 0
     compactions: int = 0
@@ -88,6 +94,8 @@ class DBStats:
     compact_sort_seconds: float = 0.0   # phase-2 share (see EngineStats)
     flush_host_seconds: float = 0.0
     bloom_negative_skips: int = 0
+    block_cache_hits: int = 0
+    block_cache_misses: int = 0
     write_stalls: int = 0
     batched_compactions: int = 0   # jobs installed from a stacked launch
 
@@ -96,6 +104,23 @@ class DBStats:
         return DBStats(**{f.name: getattr(self, f.name) +
                           getattr(other, f.name)
                           for f in dataclasses.fields(DBStats)})
+
+
+@dataclasses.dataclass(frozen=True)
+class Snapshot:
+    """Pinned read view from ``LsmDB.snapshot()``.
+
+    Pins the SST version and the memtable *set* as of capture: a read
+    sequence against one snapshot observes one consistent file set (no
+    mid-read re-snapshot retries).  The active memtable is captured by
+    reference and stays live -- this is a consistent view of immutable
+    state, not MVCC point-in-time isolation (the memtable keeps only the
+    newest version per key, so older point-in-time values are already
+    gone).  Files compacted away while the snapshot is held raise
+    ``FileNotFoundError`` on access."""
+
+    mems: tuple          # newest-first: (active, imm_newest, ..., oldest)
+    version: object      # pinned lsm.version.Version
 
 
 def make_engine(cfg: DBConfig):
@@ -137,10 +162,17 @@ class LsmDB:
         self.versions.open()
         self.scheduler = CompactionScheduler(self.cfg.scheduler)
         self.scheduler.compact_pointer = dict(self.versions.compact_pointer)
-        self.cache = TableCache(self.cfg.table_cache)
+        self._init_obs(metrics, tracer, metric_labels)
+        # obs first: the block cache streams hit/miss counts straight into
+        # the registry counters (no per-access dict lookup on the DB)
+        self.block_cache = BlockCache(
+            self.cfg.block_cache_blocks,
+            on_hit=self._c["block_cache_hits"].inc,
+            on_miss=self._c["block_cache_misses"].inc)
+        self.cache = TableCache(self.cfg.table_cache, geom=self.geom,
+                                block_cache=self.block_cache)
         self.mem = memtable.MemTable()
         self.imm: list[ImmutableMemTable] = []
-        self._init_obs(metrics, tracer, metric_labels)
         self._owns_engine = engine is None
         self._compaction_sink = compaction_sink
         self.engine = engine if engine is not None else self._make_engine()
@@ -186,6 +218,8 @@ class LsmDB:
                                              op="put", **labels)
         self._h_get = self.metrics.histogram("lsm.op.latency_us",
                                              op="get", **labels)
+        self._h_multi_get = self.metrics.histogram("lsm.op.latency_us",
+                                                   op="multi_get", **labels)
         self._g_imm = self.metrics.gauge("lsm.imm_queue.depth", **labels)
         self._g_debt = self.metrics.gauge("lsm.compaction.debt", **labels)
 
@@ -415,87 +449,151 @@ class LsmDB:
     # reads
     # ------------------------------------------------------------------
 
-    def get(self, key: bytes):
+    def snapshot(self) -> Snapshot:
+        """Capture a pinned read view (pass as ``ReadOptions.snapshot``)."""
+        with self._lock:
+            mems = (self.mem,) + tuple(e.table
+                                       for e in reversed(self.imm))
+            return Snapshot(mems=mems, version=self.versions.current)
+
+    def _read_view(self, opts: ReadOptions):
+        """(mems newest-first, version) for one read attempt."""
+        if opts.snapshot is not None:
+            return opts.snapshot.mems, opts.snapshot.version
+        # lock-free snapshot.  Safe because writers publish in the
+        # opposite order: rotation appends to imm BEFORE swapping the
+        # active table, and flush installs the L0 version BEFORE
+        # removing from imm -- so reading mem -> imm -> version can
+        # only ever see a key twice, never lose it.
+        mems = [self.mem] + [e.table for e in reversed(list(self.imm))]
+        return mems, self.versions.current
+
+    def get(self, key: bytes, opts: ReadOptions | None = None):
         """value bytes, or None if absent / deleted."""
         t0 = time.perf_counter_ns()
         try:
-            return self._get_inner(key)
+            return self._get_inner(key, opts or DEFAULT_READ_OPTIONS)
         finally:
             # gets used to bump a plain field with no lock at all (get is
             # lock-free by design); the registry counter is atomic
             self._c["gets"].inc()
             self._h_get.pend((time.perf_counter_ns() - t0) / 1000.0)
 
-    def _get_inner(self, key: bytes):
+    def _get_inner(self, key: bytes, opts: ReadOptions):
         err = None
         for _ in range(8):
-            # lock-free snapshot.  Safe because writers publish in the
-            # opposite order: rotation appends to imm BEFORE swapping the
-            # active table, and flush installs the L0 version BEFORE
-            # removing from imm -- so reading mem -> imm -> version can
-            # only ever see a key twice, never lose it.
-            mems = [self.mem] + [e.table for e in reversed(list(self.imm))]
-            version = self.versions.current
+            mems, version = self._read_view(opts)
             for m in mems:
                 found, value = m.get(key)
                 if found:
                     return value
             try:
-                return self._search_version(version, key)
+                return self._search_version(version, key, opts)
             except FileNotFoundError as e:
+                if opts.snapshot is not None:
+                    raise  # pinned view: the file is gone for good
                 # background compaction deleted an input under this
                 # snapshot; re-snapshot (the new version excludes it)
                 err = e
         raise err
 
-    def _search_version(self, version, key: bytes):
+    def multi_get(self, keys, opts: ReadOptions | None = None
+                  ) -> list[bytes | None]:
+        """Vectorized ``get``: resolve K keys with (at most) one stacked
+        bloom-probe launch and one stacked search/gather launch instead of
+        K scalar searches.  Returns values positionally; bit-identical to
+        ``[self.get(k, opts) for k in keys]``."""
+        keys = list(keys)
+        opts = opts or DEFAULT_READ_OPTIONS
+        t0 = time.perf_counter_ns()
+        try:
+            return self._multi_get_inner(keys, opts)
+        finally:
+            self._c["multi_gets"].inc()
+            self._c["multi_get_keys"].inc(len(keys))
+            dt = time.perf_counter_ns() - t0
+            self._h_multi_get.pend(dt / 1000.0)
+            tr = self.tracer
+            if tr.enabled:
+                tr.complete("db.multi_get", t0, dt,
+                            args={"n_keys": len(keys),
+                                  **(self._span_args or {})})
+
+    def _multi_get_inner(self, keys: list, opts: ReadOptions):
+        err = None
+        for _ in range(8):
+            mems, version = self._read_view(opts)
+            out: list[bytes | None] = [None] * len(keys)
+            unresolved: list[tuple[int, bytes]] = []
+            for i, key in enumerate(keys):
+                for m in mems:
+                    found, value = m.get(key)
+                    if found:
+                        out[i] = value
+                        break
+                else:
+                    unresolved.append((i, key))
+            try:
+                cands = lsm_read.version_candidates(
+                    version, unresolved, self.cache, self.geom)
+                resolved = lsm_read.resolve_candidates(
+                    cands, self.geom, opts, counters=self._c,
+                    tracer=self.tracer, span_args=self._span_args)
+            except FileNotFoundError as e:
+                if opts.snapshot is not None:
+                    raise
+                err = e
+                continue
+            for slot, (_, value) in resolved.items():
+                out[slot] = value
+            return out
+        raise err
+
+    def _search_version(self, version, key: bytes,
+                        opts: ReadOptions | None = None):
         # L0: overlapping files, newest first
         for fm in sorted(version.levels[0], key=lambda f: -f.file_no):
             if fm.smallest <= key <= fm.largest:
-                found, value = self._table_get(fm, key)
+                found, value = self._table_get(fm, key, opts)
                 if found:
                     return value
         # deeper levels: disjoint ranges
         for level in range(1, len(version.levels)):
             for fm in version.levels[level]:
                 if fm.smallest <= key <= fm.largest:
-                    found, value = self._table_get(fm, key)
+                    found, value = self._table_get(fm, key, opts)
                     if found:
                         return value
                     break
         return None
 
-    def _table_get(self, fm: FileMeta, key: bytes):
-        tbl = self.cache.get(fm, self.geom)
-        # bloom probe on the candidate block group
-        import bisect
-        i = bisect.bisect_left(tbl.keys_bytes, key)
-        if i == len(tbl.keys_bytes) or tbl.keys_bytes[i] != key:
-            if tbl.bloom.shape[0] > 0:
-                group = min(i // self.geom.block_kvs, tbl.bloom.shape[0] - 1)
-                probe = formats.pack_key_bytes(key, self.geom.key_bytes)
-                hit = ce.np_bloom_query(tbl.bloom[group:group + 1],
-                                        probe[None, None, :],
-                                        self.geom.bloom_probes)
-                if not bool(hit[0, 0]):
-                    self._c["bloom_negative_skips"].inc()
-            return False, None
-        if not tbl.is_value[i]:
-            return True, None
-        return True, formats.unpack_value_bytes(tbl.vals[i])
+    def _table_get(self, fm: FileMeta, key: bytes,
+                   opts: ReadOptions | None = None):
+        found, value, pruned = self.cache.reader(fm, self.geom).probe(
+            key, opts)
+        if pruned:
+            self._c["bloom_negative_skips"].inc()
+        return found, value
 
-    def scan(self, start: bytes, end: bytes):
+    def scan(self, start: bytes, end: bytes,
+             opts: ReadOptions | None = None):
         """[(key, value)] for start <= key < end, newest versions, no
         tombstones."""
+        opts = opts or DEFAULT_READ_OPTIONS
         err = None
         for _ in range(8):
             with self._lock:
                 # only the active table's entries are copied under the
                 # lock (it mutates under concurrent puts); immutable
                 # tables are frozen and sort safely outside it
-                imm_tables = [e.table for e in self.imm]
-                active_entries = self.mem.sorted_entries()
-                version = self.versions.current
+                if opts.snapshot is not None:
+                    imm_tables = list(opts.snapshot.mems[1:])
+                    active_entries = opts.snapshot.mems[0].sorted_entries()
+                    version = opts.snapshot.version
+                else:
+                    imm_tables = [e.table for e in self.imm]
+                    active_entries = self.mem.sorted_entries()
+                    version = self.versions.current
             mem_entries = [m.sorted_entries() for m in imm_tables] + \
                 [active_entries]
             best: dict[bytes, tuple[int, bytes | None]] = {}
@@ -509,20 +607,15 @@ class LsmDB:
                 for _, fm in version.all_files():
                     if fm.largest < start or fm.smallest >= end:
                         continue
-                    tbl = self.cache.get(fm, self.geom)
-                    import bisect
-                    lo = bisect.bisect_left(tbl.keys_bytes, start)
-                    hi = bisect.bisect_left(tbl.keys_bytes, end)
-                    for i in range(lo, hi):
-                        k = tbl.keys_bytes[i]
-                        seq = int(tbl.seqs[i])
+                    rdr = self.cache.reader(fm, self.geom)
+                    for k, seq, v in rdr.scan(start, end, opts):
                         if k not in best or best[k][0] < seq:
-                            v = formats.unpack_value_bytes(tbl.vals[i]) \
-                                if tbl.is_value[i] else None
                             best[k] = (seq, v)
                 return [(k, v) for k, (_, v) in sorted(best.items())
                         if v is not None]
             except FileNotFoundError as e:
+                if opts.snapshot is not None:
+                    raise
                 err = e
         raise err
 

@@ -1,0 +1,308 @@
+"""Batched point-read pipeline: probe -> prune -> gather (docs/read_path.md).
+
+LUDA's thesis -- per-key procedures are data-independent, so K of them
+stack into one wide device launch -- applies to reads exactly as it does
+to compactions.  ``multi_get`` resolves what it can on the host (memtable,
+immutable queue), then turns every unresolved (key, SST) pair into a
+``Candidate`` row and resolves the set in **rank-ordered waves**: wave 0
+takes every slot's newest candidate, wave 1 the next candidate of the
+slots still unresolved, and so on -- mirroring the scalar walk's
+short-circuit so a skewed batch does ~1 candidate of work per key
+instead of the full fan-out.  Each wave is one stacked pass:
+
+1. **probe/prune** -- candidates whose block is already in the
+   ``BlockCache`` skip the filter entirely (searching a cached block is
+   cheaper than probing, and exact); the rest go through one pairwise
+   bloom probe over the stacked per-SST filter rows
+   (``ops.bloom_multi_probe``): each pruned candidate is a block decode
+   that never happens.
+2. **gather** -- decode the surviving candidate blocks once each (through
+   the shared ``BlockCache``), stack them, and resolve every query with
+   one batched binary-search/gather launch (``ops.lookup_blocks``).
+
+Newest-version-wins falls out of the wave order: candidates carry the
+rank of their table in the scalar search order (L0 newest-first, then
+deeper levels), and the first wave in which a slot finds its key is by
+construction the minimum-rank find.
+
+Backends (``ReadOptions.backend``): ``"pallas"`` / ``"ref"`` dispatch the
+device kernels; ``"host"`` runs the same pipeline in pure numpy
+(``searchsorted`` over big-endian packed key rows -- no JAX dispatch,
+which wins on CPU hosts at smoke-test batch sizes); ``"auto"`` picks
+pallas on TPU and host elsewhere.  All are bit-identical.
+
+Candidate counts are padded to power-of-two buckets before a device
+launch so the jit cache stays bounded as batch shapes vary.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.core import formats
+from repro.core.formats import SSTGeometry
+from repro.obs.trace import NULL_TRACER
+
+
+@dataclasses.dataclass
+class Candidate:
+    """One (query key, SST) pair in the stacked batch."""
+    slot: int          # index into the caller's key batch
+    rank: int          # search-order priority; min-rank found wins a slot
+    reader: object     # sstable.TableReader
+    key: bytes
+
+
+_ON_TPU: bool | None = None
+
+
+def _on_tpu() -> bool:
+    # memoized: jax.default_backend() initializes the platform client on
+    # first call (tens of ms) -- that must not land inside a timed batch
+    global _ON_TPU
+    if _ON_TPU is None:
+        import jax
+        _ON_TPU = jax.default_backend() == "tpu"
+    return _ON_TPU
+
+
+def _resolve_backend(backend: str) -> str:
+    if backend == "auto":
+        return "pallas" if _on_tpu() else "host"
+    return backend
+
+
+def _bucket(n: int, lo: int = 8) -> int:
+    """Next power-of-two >= n (stable jit-cache shapes across batches)."""
+    b = lo
+    while b < n:
+        b <<= 1
+    return b
+
+
+def version_candidates(version, slot_keys, cache, geom: SSTGeometry
+                       ) -> list[Candidate]:
+    """Ranked candidates for unresolved ``(slot, key)`` pairs, mirroring
+    the scalar search order: L0 newest-first (file number descending),
+    then deeper disjoint levels top-down (at most one file per level can
+    hold the key)."""
+    cands: list[Candidate] = []
+    l0 = sorted(version.levels[0], key=lambda f: -f.file_no)
+    for slot, key in slot_keys:
+        rank = 0
+        for fm in l0:
+            if fm.smallest <= key <= fm.largest:
+                cands.append(Candidate(slot, rank, cache.reader(fm, geom),
+                                       key))
+            rank += 1
+        for level in range(1, len(version.levels)):
+            for fm in version.levels[level]:
+                if fm.smallest <= key <= fm.largest:
+                    cands.append(Candidate(slot, rank,
+                                           cache.reader(fm, geom), key))
+                    rank += 1
+                    break
+    return cands
+
+
+def resolve_candidates(cands: list[Candidate], geom: SSTGeometry, opts, *,
+                       counters=None, tracer=None, span_args=None
+                       ) -> dict[int, tuple[int, bytes | None]]:
+    """Resolve stacked candidates; ``{slot: (rank, value|None)}`` for the
+    minimum-rank *found* candidate of each slot (``None`` = tombstone;
+    absent slots found nothing).
+
+    ``counters``: the owner's ``lsm.*`` counter dict (bloom prune counts
+    land in ``bloom_negative_skips``; block-cache traffic is counted by
+    the cache's own hooks).  Raises ``FileNotFoundError`` if a candidate's
+    file was compacted away -- the caller owns retry policy.
+    """
+    if not cands:
+        return {}
+    backend = _resolve_backend(opts.backend)
+    tracer = tracer if tracer is not None else NULL_TRACER
+    sa = span_args or {}
+    # rank-ordered waves, mirroring the scalar short-circuit: wave 0
+    # resolves every slot's newest candidate in one stacked pass; only
+    # slots still unresolved carry their next candidate into wave 1.
+    # With skewed reads most slots resolve in wave 0, so the batch does
+    # ~1 candidate of work per key instead of the full candidate fan-out.
+    # First-found-in-rank-order == minimum-rank found, so the contract
+    # (and bit-identity with the scalar walk) is unchanged.
+    queues: dict[int, list[Candidate]] = {}
+    for c in cands:   # version_candidates appends in rank order per slot
+        queues.setdefault(c.slot, []).append(c)
+    best: dict[int, tuple[int, bytes | None]] = {}
+    fronts = dict.fromkeys(queues, 0)
+    while fronts:
+        wave = []
+        for slot in list(fronts):
+            q = queues[slot]
+            pos = fronts[slot]
+            if pos >= len(q):
+                del fronts[slot]
+                continue
+            wave.append(q[pos])
+            fronts[slot] = pos + 1
+        if not wave:
+            break
+        for slot, rv in _resolve_wave(wave, geom, opts, backend,
+                                      counters, tracer, sa).items():
+            best[slot] = rv
+            fronts.pop(slot, None)
+    return best
+
+
+def _resolve_wave(cands: list[Candidate], geom: SSTGeometry, opts,
+                  backend: str, counters, tracer, sa
+                  ) -> dict[int, tuple[int, bytes | None]]:
+    """One stacked probe->prune->gather pass over candidates (at most one
+    per slot)."""
+    blocks = [c.reader.candidate_block(c.key) for c in cands]  # lazy load
+
+    # -- residency: an already-decoded block skips the bloom stage ------
+    # (the filter's only job is to spare a decode; searching a cached
+    # block is cheaper than probing the filter, and the search result is
+    # exact, so skipping the probe cannot change the answer)
+    decoded: dict[tuple[int, int], object] = {}
+    for c, b in zip(cands, blocks):
+        ck = (id(c.reader), b)
+        if ck not in decoded:
+            blk = c.reader.cached_block(b)
+            if blk is not None:
+                decoded[ck] = blk
+    alive = np.zeros(len(cands), bool)
+    probe_idx = []
+    for i, (c, b) in enumerate(zip(cands, blocks)):
+        if (id(c.reader), b) in decoded:
+            alive[i] = True
+        else:
+            probe_idx.append(i)
+
+    # -- probe: one stacked pairwise bloom launch over uncached rows ----
+    if probe_idx:
+        rows = [cands[i].reader.bloom_row(blocks[i]) for i in probe_idx]
+        if any(r is not None for r in rows):
+            probes = np.stack(
+                [formats.pack_key_bytes(cands[i].key, geom.key_bytes)
+                 for i in probe_idx])                          # [P, L]
+            w = next(r.shape[-1] for r in rows if r is not None)
+            ones = np.full((w,), 0xFFFFFFFF, np.uint32)  # no filter: keep
+            filters = np.stack([ones if r is None else r for r in rows])
+            with tracer.span("read.bloom_probe", n=len(probe_idx), **sa):
+                keep = _bloom_stage(filters, probes, geom, backend)
+        else:
+            keep = np.ones(len(probe_idx), bool)
+        alive[probe_idx] = keep
+        if counters is not None:
+            pruned = int(len(probe_idx) - keep.sum())
+            if pruned:
+                counters["bloom_negative_skips"].inc(pruned)
+
+    survivors = [i for i in range(len(cands)) if alive[i]]
+    if not survivors:
+        return {}
+
+    # -- gather: decode surviving blocks once, one stacked search -------
+    with tracer.span("read.block_gather", n=len(survivors), **sa):
+        for i in survivors:
+            ck = (id(cands[i].reader), blocks[i])
+            if ck not in decoded:
+                decoded[ck] = cands[i].reader.decode_block(
+                    blocks[i], fill_cache=opts.fill_cache,
+                    verify_crc=opts.verify_crc)
+        blks = [decoded[(id(cands[i].reader), blocks[i])]
+                for i in survivors]
+        if backend == "host":
+            found, metas, vals = _host_lookup(
+                blks, [cands[i].key for i in survivors])
+        else:
+            queries = np.stack(
+                [formats.pack_key_bytes(cands[i].key, geom.key_bytes)
+                 for i in survivors])
+            found, metas, vals = _device_lookup(blks, queries, backend)
+
+    # -- resolve: at most one candidate per slot in a wave --------------
+    best: dict[int, tuple[int, bytes | None]] = {}
+    for j, i in enumerate(survivors):
+        if not found[j]:
+            continue
+        c = cands[i]
+        value = formats.unpack_value_bytes(vals[j]) \
+            if int(metas[j]) & 1 else None
+        best[c.slot] = (c.rank, value)
+    return best
+
+
+def _bloom_stage(filters, probes, geom, backend):
+    n = filters.shape[0]
+    if backend == "host":
+        from repro.lsm import cpu_engine as ce
+        hit = ce.np_bloom_query(filters, probes[:, None, :],
+                                geom.bloom_probes)
+        return np.asarray(hit)[:, 0].astype(bool)
+    from repro.kernels import ops
+    cp = _bucket(n)
+    if cp != n:  # zero filters -> padded rows report absent
+        filters = np.pad(filters, ((0, cp - n), (0, 0)))
+        probes = np.pad(probes, ((0, cp - n), (0, 0)))
+    hit = ops.bloom_multi_probe(filters, probes,
+                                n_probes=geom.bloom_probes,
+                                backend=backend)
+    return np.asarray(hit)[:n]
+
+
+def _host_lookup(blks, keys):
+    """Pure-numpy gather, vectorized per distinct block: candidates that
+    landed in the same block resolve with ONE ``searchsorted`` over the
+    block's packed key column -- with skewed reads most of a batch hits a
+    few hot blocks, so the numpy fixed cost amortizes the way the scalar
+    path never can.  Queries cast to the column's ``S`` width zero-pad to
+    exactly the fixed packing (keys never end with NUL), so comparisons
+    are exact.  Bit-identical to the device launch."""
+    n = len(blks)
+    found = np.zeros(n, bool)
+    metas = np.zeros(n, np.uint32)
+    vw = blks[0].vals.shape[-1] if n else 0
+    vals = np.zeros((n, vw), np.uint32)
+    groups: dict[int, list[int]] = {}
+    for j, blk in enumerate(blks):
+        groups.setdefault(id(blk), []).append(j)
+    for idxs in groups.values():
+        blk = blks[idxs[0]]
+        col = blk.keys_packed
+        qarr = np.asarray([keys[j] for j in idxs], dtype=col.dtype)
+        pos = np.searchsorted(col, qarr)
+        safe = np.minimum(pos, len(col) - 1)
+        ok = (pos < blk.nvalid) & (col[safe] == qarr)
+        for t, j in enumerate(idxs):
+            if ok[t]:
+                found[j] = True
+                metas[j] = blk.meta[pos[t]]
+                vals[j] = blk.vals[pos[t]]
+    return found, metas, vals
+
+
+def _device_lookup(blks, queries, backend):
+    """Stack the candidate blocks and resolve every query in one
+    ``lookup_blocks`` launch (padded to a power-of-two bucket)."""
+    from repro.kernels import ops
+    n = len(blks)
+    keys = np.stack([b.keys_u32 for b in blks])        # [C, K, L]
+    meta = np.stack([b.meta for b in blks])            # [C, K]
+    vals = np.stack([b.vals for b in blks])            # [C, K, Vw]
+    nvalid = np.array([b.nvalid for b in blks], np.int32)
+    cp = _bucket(n)
+    if cp != n:
+        pad = cp - n
+        keys = np.pad(keys, ((0, pad), (0, 0), (0, 0)),
+                      constant_values=0xFFFFFFFF)
+        meta = np.pad(meta, ((0, pad), (0, 0)))
+        vals = np.pad(vals, ((0, pad), (0, 0), (0, 0)))
+        nvalid = np.pad(nvalid, (0, pad))  # nvalid=0 -> never found
+        queries = np.pad(queries, ((0, pad), (0, 0)))
+    found, m, v = ops.lookup_blocks(keys, meta, vals, nvalid, queries,
+                                    backend=backend)
+    return (np.asarray(found)[:n], np.asarray(m)[:n], np.asarray(v)[:n])

@@ -27,16 +27,30 @@ would starve all but one shard).  See docs/sharding.md.
 from __future__ import annotations
 
 import bisect
+import dataclasses
 import heapq
 import json
 import os
 
 from repro.core.background import GlobalCompactionQueue
+from repro.lsm import ReadOptions
 from repro.lsm.db import DBConfig, DBStats, LsmDB, make_engine
 from repro.obs.metrics import MetricsRegistry
 from repro.obs.trace import NULL_TRACER
 
 SHARDS_FILE = "SHARDS.json"
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardedSnapshot:
+    """Pinned read view over every shard (``ShardedDB.snapshot()``).
+
+    One per-shard ``Snapshot`` each, captured back to back -- consistent
+    per shard, near-simultaneous across shards (there is no global write
+    barrier; cross-shard writes racing the capture may land on either
+    side, exactly like two independent DBs)."""
+
+    shards: tuple   # one lsm.db.Snapshot per shard, in shard order
 
 
 def boundaries_from_sample(sample_keys, n_shards: int) -> list[bytes]:
@@ -177,23 +191,59 @@ class ShardedDB:
         """Index of the shard owning ``key``."""
         return bisect.bisect_right(self.boundaries, key)
 
+    def _shard_opts(self, opts: ReadOptions | None, i: int
+                    ) -> ReadOptions | None:
+        """Narrow a store-level ``ReadOptions`` to shard ``i`` (a
+        ``ShardedSnapshot`` splits into the shard's own pinned view;
+        everything else passes through untouched)."""
+        if opts is None or not isinstance(opts.snapshot, ShardedSnapshot):
+            return opts
+        return dataclasses.replace(opts, snapshot=opts.snapshot.shards[i])
+
+    def snapshot(self) -> ShardedSnapshot:
+        """Capture a pinned read view across every shard (pass as
+        ``ReadOptions.snapshot`` to ``get``/``multi_get``/``scan``)."""
+        return ShardedSnapshot(shards=tuple(s.snapshot()
+                                            for s in self.shards))
+
     def put(self, key: bytes, value: bytes):
         self.shards[self.shard_of(key)].put(key, value)
 
-    def get(self, key: bytes):
-        return self.shards[self.shard_of(key)].get(key)
+    def get(self, key: bytes, opts: ReadOptions | None = None):
+        i = self.shard_of(key)
+        return self.shards[i].get(key, self._shard_opts(opts, i))
+
+    def multi_get(self, keys, opts: ReadOptions | None = None
+                  ) -> list[bytes | None]:
+        """Vectorized ``get`` across shards: routes the batch by boundary
+        bisect, issues one ``LsmDB.multi_get`` sub-batch per shard hit,
+        and merges results back into input order.  Bit-identical to
+        ``[self.get(k, opts) for k in keys]``."""
+        keys = list(keys)
+        by_shard: dict[int, list[tuple[int, bytes]]] = {}
+        for slot, key in enumerate(keys):
+            by_shard.setdefault(self.shard_of(key), []).append((slot, key))
+        out: list[bytes | None] = [None] * len(keys)
+        for i, slot_keys in sorted(by_shard.items()):
+            values = self.shards[i].multi_get(
+                [k for _, k in slot_keys], self._shard_opts(opts, i))
+            for (slot, _), value in zip(slot_keys, values):
+                out[slot] = value
+        return out
 
     def delete(self, key: bytes):
         self.shards[self.shard_of(key)].delete(key)
 
-    def scan(self, start: bytes, end: bytes):
+    def scan(self, start: bytes, end: bytes,
+             opts: ReadOptions | None = None):
         """[(key, value)] for start <= key < end across shards, k-way
         merged from the per-shard iterators (ranges are disjoint, so the
         merge mostly concatenates -- but it stays correct for any
         boundary table)."""
         lo = self.shard_of(start)
         hi = min(self.shard_of(end), self.n_shards - 1)
-        parts = [self.shards[i].scan(start, end) for i in range(lo, hi + 1)]
+        parts = [self.shards[i].scan(start, end, self._shard_opts(opts, i))
+                 for i in range(lo, hi + 1)]
         return list(heapq.merge(*parts))
 
     # ------------------------------------------------------------------

@@ -1,0 +1,443 @@
+"""Batched read path: multi_get vs the scalar get() oracle, ReadOptions
+semantics, the TableReader protocol, and the read-path kernels.
+
+The contract under test everywhere: ``db.multi_get(keys, opts)`` is
+bit-identical to ``[db.get(k, opts) for k in keys]`` -- across backends,
+cache settings, engines (sync/async), and single vs sharded stores.
+"""
+
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.core.formats import SSTGeometry
+from repro.core.scheduler import SchedulerConfig
+from repro.kernels import ops, ref
+from repro.lsm import DEFAULT_READ_OPTIONS, ReadOptions
+from repro.lsm.db import DBConfig, LsmDB
+from repro.lsm.sharded import ShardedDB
+
+GEOM = SSTGeometry(key_bytes=16, value_bytes=32, block_bytes=512,
+                   sst_bytes=2048)
+BACKENDS = ("host", "ref", "pallas", "auto")
+
+
+def cfg(engine="cpu", **kw):
+    return DBConfig(
+        geom=GEOM, engine=engine,
+        memtable_bytes=kw.pop("memtable_bytes", 600),
+        scheduler=SchedulerConfig(l0_trigger=3, base_bytes=40_000), **kw)
+
+
+def fill(db, rng, n_keys=260, n_ops=700, key_space=200, prefix=b""):
+    """Random puts/overwrites/deletes; returns the expected kv dict."""
+    kv = {}
+    for i in range(n_ops):
+        k = prefix + b"k%05d" % int(rng.integers(0, key_space))
+        if rng.random() < 0.15:
+            db.delete(k)
+            kv[k] = None
+        else:
+            v = b"v%06d" % i
+            db.put(k, v)
+            kv[k] = v
+    return kv
+
+
+# ---------------------------------------------------------------------------
+# multi_get vs scalar oracle
+# ---------------------------------------------------------------------------
+
+
+def test_multi_get_matches_scalar_oracle_all_backends(tmp_path):
+    rng = np.random.default_rng(7)
+    db = LsmDB(str(tmp_path / "db"), cfg())
+    kv = fill(db, rng)
+    db.flush()
+    db.maybe_compact()
+    kv.update(fill(db, rng, n_ops=60))   # fresh memtable entries on top
+    keys = list(kv) + [b"k-missing-%02d" % i for i in range(16)]
+    rng.shuffle(keys)
+    expect = [db.get(k) for k in keys]
+    assert any(v is None for v in expect)      # misses + tombstones hit
+    assert any(v is not None for v in expect)
+    for backend in BACKENDS:
+        got = db.multi_get(keys, ReadOptions(backend=backend))
+        assert got == expect, backend
+    db.close()
+
+
+def test_multi_get_missing_and_deleted_keys(tmp_path):
+    db = LsmDB(str(tmp_path / "db"), cfg())
+    db.put(b"alive", b"v1")
+    db.put(b"doomed", b"v2")
+    db.flush()
+    db.delete(b"doomed")                 # tombstone above a flushed value
+    db.flush()
+    got = db.multi_get([b"alive", b"doomed", b"never-existed"])
+    assert got == [b"v1", None, None]
+    db.close()
+
+
+def test_multi_get_empty_and_memtable_only(tmp_path):
+    db = LsmDB(str(tmp_path / "db"), cfg())
+    assert db.multi_get([]) == []
+    db.put(b"a", b"1")
+    assert db.multi_get([b"a", b"b"]) == [b"1", None]   # no SSTs at all
+    db.close()
+
+
+def test_multi_get_overwrites_resolve_newest(tmp_path):
+    """A key rewritten across several flushed generations must resolve to
+    the newest version (L0 rank ordering in the batched path)."""
+    db = LsmDB(str(tmp_path / "db"), cfg(memtable_bytes=200))
+    for gen in range(6):
+        for i in range(8):
+            db.put(b"hot%03d" % i, b"gen%d" % gen)
+        db.flush()
+    keys = [b"hot%03d" % i for i in range(8)]
+    assert db.multi_get(keys) == [b"gen5"] * 8
+    assert db.multi_get(keys) == [db.get(k) for k in keys]
+    db.close()
+
+
+def test_multi_get_async_store(tmp_path):
+    rng = np.random.default_rng(11)
+    db = LsmDB(str(tmp_path / "db"),
+               cfg(async_compaction=True, flush_workers=2))
+    kv = fill(db, rng, n_ops=500)
+    # no drain: reads race background flush/compaction on purpose
+    keys = list(kv)
+    got = db.multi_get(keys)
+    assert got == [kv[k] for k in keys]
+    db.wait_idle()
+    assert db.multi_get(keys) == [kv[k] for k in keys]
+    db.close()
+
+
+def test_multi_get_duplicate_keys_in_batch(tmp_path):
+    db = LsmDB(str(tmp_path / "db"), cfg())
+    db.put(b"dup", b"v")
+    db.flush()
+    assert db.multi_get([b"dup", b"miss", b"dup"]) == [b"v", None, b"v"]
+    db.close()
+
+
+# ---------------------------------------------------------------------------
+# ReadOptions semantics
+# ---------------------------------------------------------------------------
+
+
+def test_read_options_frozen_and_defaults():
+    opts = ReadOptions()
+    assert (opts.snapshot, opts.fill_cache, opts.verify_crc,
+            opts.backend) == (None, True, False, "auto")
+    with pytest.raises(dataclasses.FrozenInstanceError):
+        opts.backend = "host"
+    assert DEFAULT_READ_OPTIONS == ReadOptions()
+
+
+def test_cache_on_off_bit_identity(tmp_path):
+    rng = np.random.default_rng(3)
+    db = LsmDB(str(tmp_path / "db"), cfg())
+    kv = fill(db, rng)
+    db.flush()
+    db.maybe_compact()
+    keys = list(kv)
+    cold = db.multi_get(keys, ReadOptions(fill_cache=False))
+    h0 = db.stats
+    warm = db.multi_get(keys)                  # fills the cache
+    warm2 = db.multi_get(keys)                 # served from the cache
+    h1 = db.stats
+    assert cold == warm == warm2 == [db.get(k) for k in keys]
+    assert h1.block_cache_hits > h0.block_cache_hits
+    # a disabled cache must also be bit-identical (and count misses)
+    db2 = LsmDB(str(tmp_path / "db2"), cfg(block_cache_blocks=0))
+    kv2 = fill(db2, np.random.default_rng(3))
+    db2.flush()
+    keys2 = list(kv2)
+    assert db2.multi_get(keys2) == [db2.get(k) for k in keys2]
+    s2 = db2.stats
+    assert s2.block_cache_hits == 0 and s2.block_cache_misses > 0
+    db2.close()
+    db.close()
+
+
+def test_verify_crc_reads_are_identical(tmp_path):
+    db = LsmDB(str(tmp_path / "db"), cfg())
+    kv = fill(db, np.random.default_rng(5), n_ops=300)
+    db.flush()
+    keys = list(kv)
+    strict = ReadOptions(verify_crc=True, fill_cache=False)
+    assert db.multi_get(keys, strict) == [db.get(k) for k in keys]
+    assert db.scan(b"k", b"l", strict) == db.scan(b"k", b"l")
+    db.close()
+
+
+def test_snapshot_pins_file_set(tmp_path):
+    db = LsmDB(str(tmp_path / "db"), cfg())
+    kv = fill(db, np.random.default_rng(9), n_ops=300)
+    db.flush()
+    snap = db.snapshot()
+    so = ReadOptions(snapshot=snap)
+    keys = sorted(kv)
+    before = db.multi_get(keys, so)
+    assert before == [kv[k] for k in keys]
+    # writes after capture land in a *new* memtable generation only after
+    # rotation; the pinned version + immutable set stays readable
+    db.put(b"post-snap", b"x")
+    assert db.multi_get(keys, so) == before
+    assert db.get(b"post-snap", so) == b"x"   # active memtable stays live
+    db.close()
+
+
+def test_snapshot_raises_after_compaction_drops_files(tmp_path):
+    import os
+    db = LsmDB(str(tmp_path / "db"), cfg())
+    for i in range(40):
+        db.put(b"s%04d" % i, b"v%d" % i)
+    db.flush()
+    snap = db.snapshot()
+    # simulate the pinned files being compacted away: remove them on disk
+    # and drop every cached reader so the next read must hit the filesystem
+    for _, fm in snap.version.all_files():
+        db.cache.drop(fm.file_no)
+        os.remove(fm.path)
+    with pytest.raises(FileNotFoundError):
+        db.get(b"s0000", ReadOptions(snapshot=snap))
+    with pytest.raises(FileNotFoundError):
+        db.multi_get([b"s0000"], ReadOptions(snapshot=snap))
+    db.close()
+
+
+# ---------------------------------------------------------------------------
+# sharded
+# ---------------------------------------------------------------------------
+
+
+def rand_key(rng):
+    return bytes([int(rng.integers(1, 255))]) + \
+        b"k%04d" % int(rng.integers(0, 300))
+
+
+def test_sharded_multi_get_matches_scalar(tmp_path):
+    rng = np.random.default_rng(13)
+    db = ShardedDB(str(tmp_path / "sh"), cfg(), shards=4)
+    kv = {}
+    for i in range(600):
+        k = rand_key(rng)
+        if rng.random() < 0.1:
+            db.delete(k)
+            kv[k] = None
+        else:
+            kv[k] = b"v%05d" % i
+            db.put(k, kv[k])
+    db.flush()
+    db.maybe_compact()
+    keys = list(kv) + [b"\x05missing", b"\xf0missing"]
+    rng.shuffle(keys)
+    expect = [db.get(k) for k in keys]
+    for backend in BACKENDS:
+        assert db.multi_get(keys, ReadOptions(backend=backend)) == expect
+    # batch routing really did fan out across shards
+    assert sum(1 for s in db.shards if s.stats.multi_gets > 0) >= 2
+    db.close()
+
+
+def test_sharded_multi_get_straddles_boundaries(tmp_path):
+    """Keys sitting exactly on and around every boundary resolve through
+    the correct shard (boundary key belongs to the right shard)."""
+    db = ShardedDB(str(tmp_path / "sh"), cfg(), shards=4)
+    keys = []
+    for b in db.boundaries:
+        below = bytes([b[0] - 1]) + b"x"
+        for k in (below, b + b"", b + b"x"):
+            keys.append(k)
+    for i, k in enumerate(keys):
+        db.put(k, b"bv%02d" % i)
+    db.flush()
+    expect = [b"bv%02d" % i for i in range(len(keys))]
+    assert db.multi_get(keys) == expect
+    assert [db.get(k) for k in keys] == expect
+    owners = {db.shard_of(k) for k in keys}
+    assert owners == {0, 1, 2, 3}
+    db.close()
+
+
+def test_sharded_snapshot_splits_per_shard(tmp_path):
+    db = ShardedDB(str(tmp_path / "sh"), cfg(), shards=2)
+    db.put(b"\x10a", b"left")
+    db.put(b"\xf0z", b"right")
+    db.flush()
+    snap = db.snapshot()
+    assert len(snap.shards) == 2
+    so = ReadOptions(snapshot=snap)
+    assert db.multi_get([b"\x10a", b"\xf0z"], so) == [b"left", b"right"]
+    assert db.get(b"\x10a", so) == b"left"
+    assert db.scan(b"\x00", b"\xff", so) == [(b"\x10a", b"left"),
+                                             (b"\xf0z", b"right")]
+    db.close()
+
+
+# ---------------------------------------------------------------------------
+# bloom behavior
+# ---------------------------------------------------------------------------
+
+
+def test_bloom_false_positive_only_batch(tmp_path):
+    """A batch of keys that are all absent: with 1-bit filters most
+    candidates are bloom false positives, so the gather launch runs and
+    must still report every key absent (found=False beats FP=maybe)."""
+    geom = dataclasses.replace(GEOM, bloom_bits_per_key=1)
+    db = LsmDB(str(tmp_path / "db"),
+               dataclasses.replace(cfg(), geom=geom))
+    for i in range(120):
+        db.put(b"present%04d" % i, b"v%d" % i)
+    db.flush()
+    missing = [b"present%04d" % i for i in range(200, 260)]
+    assert db.multi_get(missing) == [None] * len(missing)
+    for backend in BACKENDS:
+        assert db.multi_get(missing, ReadOptions(backend=backend)) == \
+            [None] * len(missing)
+    db.close()
+
+
+def test_bloom_prune_counted_per_candidate(tmp_path):
+    db = LsmDB(str(tmp_path / "db"), cfg())
+    for i in range(60):
+        db.put(b"b%04d" % i, b"v%d" % i)
+    db.flush()
+    s0 = db.stats
+    # in-range misses: the file's [smallest, largest] covers these, so
+    # each one becomes a candidate the filter should prune
+    misses = [b"b%04dx" % i for i in range(30)]
+    assert db.multi_get(misses) == [None] * 30
+    assert db.stats.bloom_negative_skips > s0.bloom_negative_skips
+    db.close()
+
+
+# ---------------------------------------------------------------------------
+# TableReader protocol + deprecations
+# ---------------------------------------------------------------------------
+
+
+def test_table_reader_uniform_surface(tmp_path):
+    db = LsmDB(str(tmp_path / "db"), cfg())
+    kv = fill(db, np.random.default_rng(21), n_ops=300)
+    db.flush()
+    fm = next(fm for _, fm in db.versions.current.all_files())
+    rdr = db.cache.reader(fm)
+    assert db.cache.reader(fm) is rdr           # cached per file
+    present = [k for k, v in kv.items() if v is not None][:8]
+    for k in present:
+        found, value, pruned = rdr.probe(k)
+        if found:
+            assert value == rdr.get(k)
+    assert rdr.multi_get(present) == [rdr.get(k) for k in present]
+    entries = rdr.scan(b"", b"\xff" * 4)
+    ks = [k for k, _, _ in entries]
+    assert ks == sorted(ks)                     # key order, unique keys
+    assert len(ks) == len(set(ks))
+    assert any(v is None for _, _, v in entries) or \
+        all(v is not None for _, _, v in entries)  # tombstones included
+    db.close()
+
+
+def test_table_reader_lazy_load(tmp_path):
+    db = LsmDB(str(tmp_path / "db"), cfg())
+    for i in range(40):
+        db.put(b"z%04d" % i, b"v%d" % i)
+    db.flush()
+    fm = next(fm for _, fm in db.versions.current.all_files())
+    db.cache.drop(fm.file_no)
+    rdr = db.cache.reader(fm)
+    assert rdr._img is None                     # nothing read yet
+    assert rdr.get(b"z0000") == b"v0"
+    assert rdr._img is not None
+    db.close()
+
+
+def test_deprecated_entry_points_warn(tmp_path):
+    db = LsmDB(str(tmp_path / "db"), cfg())
+    db.put(b"w", b"1")
+    db.flush()
+    fm = next(fm for _, fm in db.versions.current.all_files())
+    with pytest.warns(DeprecationWarning, match="TableCache.reader"):
+        tbl = db.cache.get(fm, GEOM)
+    with pytest.warns(DeprecationWarning, match="TableReader"):
+        found, value = tbl.get(b"w")
+    assert (found, value) == (True, b"1")       # still correct, just loud
+    db.close()
+
+
+def test_block_cache_drop_file(tmp_path):
+    db = LsmDB(str(tmp_path / "db"), cfg())
+    for i in range(40):
+        db.put(b"c%04d" % i, b"v%d" % i)
+    db.flush()
+    assert db.get(b"c0000") == b"v0"
+    assert len(db.block_cache) > 0
+    fm = next(fm for _, fm in db.versions.current.all_files())
+    db.cache.drop(fm.file_no)
+    assert len(db.block_cache) == 0             # drop cascades to blocks
+    db.close()
+
+
+# ---------------------------------------------------------------------------
+# kernels vs oracle
+# ---------------------------------------------------------------------------
+
+
+def test_multi_probe_kernel_matches_ref():
+    rng = np.random.default_rng(0)
+    n, w, lanes, probes = 37, 8, 4, 6
+    keys = rng.integers(0, 2**32, (n, lanes), dtype=np.uint32)
+    filters = np.asarray(ref.bloom_build(
+        keys[:, None, :], n_words=w, n_probes=probes))
+    # row i's filter contains exactly key i -> every pairwise probe hits
+    got = np.asarray(ops.bloom_multi_probe(filters, keys, n_probes=probes,
+                                           backend="pallas"))
+    assert got.all()
+    # shuffled filters: compare pallas vs ref bit-for-bit on maybes
+    perm = rng.permutation(n)
+    for backend in ("pallas", "ref"):
+        got = np.asarray(ops.bloom_multi_probe(
+            filters[perm], keys, n_probes=probes, backend=backend))
+        want = np.asarray(ref.bloom_multi_probe(
+            filters[perm], keys, n_probes=probes))
+        np.testing.assert_array_equal(got, want)
+
+
+def test_lookup_blocks_kernel_matches_python():
+    rng = np.random.default_rng(1)
+    C, K, L, Vw = 23, 16, 4, 3
+    # lex-sorted rows: leading lanes zero, last lane sorted ascending
+    keys = np.zeros((C, K, L), np.uint32)
+    keys[:, :, -1] = np.sort(
+        rng.integers(0, 500, (C, K)).astype(np.uint32), axis=1)
+    nvalid = rng.integers(1, K + 1, C).astype(np.int32)
+    for c in range(C):
+        keys[c, nvalid[c]:] = 0xFFFFFFFF        # sentinel contract
+    meta = rng.integers(1, 2**31, (C, K), dtype=np.uint32)
+    vals = rng.integers(0, 2**32, (C, K, Vw), dtype=np.uint32)
+    pick = rng.integers(0, K, C) % nvalid
+    present_q = keys[np.arange(C), pick]        # (C, L) known-present
+    rand_q = np.zeros((C, L), np.uint32)
+    rand_q[:, -1] = rng.integers(0, 600, C)     # maybe present, maybe not
+    queries = np.where(rng.random((C, 1)) < 0.5,
+                       present_q, rand_q).astype(np.uint32)
+    for backend in ("pallas", "ref"):
+        found, m, v = (np.asarray(x) for x in ops.lookup_blocks(
+            keys, meta, vals, nvalid, queries, backend=backend))
+        for c in range(C):
+            rows = [tuple(keys[c, i]) for i in range(int(nvalid[c]))]
+            q = tuple(queries[c])
+            if q in rows:
+                i = rows.index(q)               # leftmost = newest
+                assert found[c], (backend, c)
+                assert m[c] == meta[c, i]
+                np.testing.assert_array_equal(v[c], vals[c, i])
+            else:
+                assert not found[c], (backend, c)
+                assert m[c] == 0 and not v[c].any()
