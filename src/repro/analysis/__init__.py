@@ -1,0 +1,79 @@
+"""``repro.analysis``: zero-dependency static analysis + runtime
+sanitizer for the repo's concurrency and JAX-tracing conventions.
+
+Run as ``python -m repro.analysis src/ tests/`` (see ``__main__``).
+Checkers (docs/static_analysis.md has the full catalog):
+
+* ``locks``   -- LD001-LD004: ``# guarded-by:`` lock discipline.
+* ``tracer``  -- TL001-TL003: tracer leaks / host syncs in jit scope.
+* ``jitcache``-- JC001: unbucketed shapes into jitted entry points.
+* ``sanitize``-- runtime companion (``REPRO_SANITIZE=1``).
+"""
+
+from __future__ import annotations
+
+import ast
+import os
+
+from repro.analysis import jitcache, locks, tracer
+from repro.analysis.findings import (Finding, Report, apply_baseline,
+                                     load_baseline, normalize_path,
+                                     write_baseline)
+
+CHECKERS = {
+    "locks": locks.check,
+    "tracer": tracer.check,
+    "jitcache": jitcache.check,
+}
+
+# directories never walked implicitly (fixture corpora contain known-bad
+# code on purpose; explicit file arguments still check them)
+SKIP_DIRS = {"__pycache__", ".git", "analysis_fixtures"}
+
+
+def iter_py_files(paths: list[str]) -> list[str]:
+    out: list[str] = []
+    for p in paths:
+        if os.path.isfile(p):
+            out.append(p)
+            continue
+        for root, dirs, files in os.walk(p):
+            dirs[:] = sorted(d for d in dirs if d not in SKIP_DIRS)
+            for f in sorted(files):
+                if f.endswith(".py"):
+                    out.append(os.path.join(root, f))
+    return out
+
+
+def check_file(path: str, checkers=None, root: str | None = None
+               ) -> list[Finding]:
+    with open(path, encoding="utf-8") as f:
+        source = f.read()
+    rel = normalize_path(path, root)
+    try:
+        tree = ast.parse(source, filename=path)
+    except SyntaxError as e:
+        return [Finding(rule="PARSE", path=rel, line=e.lineno or 1,
+                        qualname="<module>", detail="syntax-error",
+                        message=f"cannot parse: {e.msg}")]
+    findings: list[Finding] = []
+    for name, fn in CHECKERS.items():
+        if checkers is None or name in checkers:
+            findings.extend(fn(rel, tree, source))
+    return findings
+
+
+def run_paths(paths: list[str], checkers=None, root: str | None = None
+              ) -> list[Finding]:
+    findings: list[Finding] = []
+    for path in iter_py_files(paths):
+        findings.extend(check_file(path, checkers=checkers, root=root))
+    findings.sort(key=lambda f: (f.path, f.line, f.rule, f.detail))
+    return findings
+
+
+__all__ = [
+    "CHECKERS", "Finding", "Report", "apply_baseline", "check_file",
+    "iter_py_files", "load_baseline", "normalize_path", "run_paths",
+    "write_baseline",
+]

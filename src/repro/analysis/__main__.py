@@ -1,0 +1,87 @@
+"""CLI: ``python -m repro.analysis src/ tests/``.
+
+Exit status 0 when every finding is suppressed by the baseline, 1 when
+new findings exist (or, with ``--strict``, when the baseline has stale
+entries -- CI runs strict so the committed baseline always matches a
+fresh run).
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+
+from repro.analysis import (CHECKERS, apply_baseline, load_baseline,
+                            run_paths, write_baseline)
+
+DEFAULT_BASELINE = "analysis-baseline.txt"
+
+
+def main(argv: list[str] | None = None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.analysis",
+        description="static analysis: lock discipline, tracer leaks, "
+                    "jit-cache hygiene")
+    ap.add_argument("paths", nargs="+", help="files or directories")
+    ap.add_argument("--baseline", default=None,
+                    help=f"suppression file (default: {DEFAULT_BASELINE} "
+                         "when it exists)")
+    ap.add_argument("--no-baseline", action="store_true",
+                    help="ignore any baseline (report everything)")
+    ap.add_argument("--write-baseline", metavar="FILE",
+                    help="write a baseline covering current findings "
+                         "(justifications are TODO placeholders to edit)")
+    ap.add_argument("--checkers", default=None,
+                    help="comma list: " + ",".join(sorted(CHECKERS)))
+    ap.add_argument("--strict", action="store_true",
+                    help="stale baseline entries are failures too")
+    ap.add_argument("--json", action="store_true", dest="as_json",
+                    help="machine-readable report on stdout")
+    args = ap.parse_args(argv)
+
+    checkers = None
+    if args.checkers:
+        checkers = set(args.checkers.split(","))
+        unknown = checkers - set(CHECKERS)
+        if unknown:
+            ap.error(f"unknown checkers: {sorted(unknown)}")
+
+    findings = run_paths(args.paths, checkers=checkers)
+
+    if args.write_baseline:
+        write_baseline(args.write_baseline, findings)
+        print(f"wrote {args.write_baseline} "
+              f"({len({f.fingerprint for f in findings})} entries)")
+        return 0
+
+    baseline = {}
+    path = args.baseline
+    if not args.no_baseline:
+        if path is None and os.path.exists(DEFAULT_BASELINE):
+            path = DEFAULT_BASELINE
+        if path is not None:
+            baseline = load_baseline(path)
+    report = apply_baseline(findings, baseline)
+
+    if args.as_json:
+        print(report.render_json())
+    else:
+        for f in report.new:
+            print(f.render())
+        for fp in report.stale:
+            print(f"stale baseline entry (no matching finding): {fp}")
+        n_sup = len({f.fingerprint for f in report.suppressed})
+        print(f"repro.analysis: {len(report.new)} new finding(s), "
+              f"{n_sup} suppressed pattern(s), "
+              f"{len(report.stale)} stale baseline entr(y/ies)")
+
+    if report.new:
+        return 1
+    if args.strict and report.stale:
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,132 @@
+"""Finding model + baseline (suppression) file for ``repro.analysis``.
+
+A ``Finding`` is one rule violation at one source location.  Its
+``fingerprint`` deliberately excludes the line number -- it is
+``rule:relpath:qualname:detail`` -- so findings survive unrelated edits
+to the same file and the committed baseline does not churn on every
+refactor.  Several textually distinct accesses of the same attribute in
+the same function share one fingerprint (suppressing the pattern once
+suppresses all of its occurrences there, which is what a reviewer means
+when they justify it).
+
+The baseline file is line-oriented and diff-friendly::
+
+    # comment
+    <fingerprint> | <one-line justification>
+
+Every entry MUST carry a justification; ``load_baseline`` rejects bare
+fingerprints so "just silence it" suppressions cannot be committed.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+
+
+@dataclasses.dataclass(frozen=True)
+class Finding:
+    rule: str        # e.g. "LD001"
+    path: str        # repo-relative, forward slashes
+    line: int        # 1-based source line (reporting only, not identity)
+    qualname: str    # "Class.method" / "function" / "<module>"
+    detail: str      # rule-specific discriminator (attr name, callee, ...)
+    message: str     # human-readable explanation
+
+    @property
+    def fingerprint(self) -> str:
+        return f"{self.rule}:{self.path}:{self.qualname}:{self.detail}"
+
+    def render(self) -> str:
+        return (f"{self.path}:{self.line}: {self.rule} "
+                f"[{self.qualname}] {self.message}")
+
+    def to_json(self) -> dict:
+        return dataclasses.asdict(self)
+
+
+def normalize_path(path: str, root: str | None = None) -> str:
+    """Repo-relative forward-slash path (fingerprint + report form)."""
+    root = root or os.getcwd()
+    try:
+        rel = os.path.relpath(os.path.abspath(path), os.path.abspath(root))
+    except ValueError:          # different drive (windows) -- keep absolute
+        rel = os.path.abspath(path)
+    return rel.replace(os.sep, "/")
+
+
+class BaselineError(ValueError):
+    pass
+
+
+def load_baseline(path: str) -> dict[str, str]:
+    """{fingerprint: justification}.  Raises ``BaselineError`` on an
+    entry without a justification (every suppression must say why)."""
+    entries: dict[str, str] = {}
+    with open(path, encoding="utf-8") as f:
+        for lineno, raw in enumerate(f, 1):
+            line = raw.strip()
+            if not line or line.startswith("#"):
+                continue
+            fp, sep, why = line.partition("|")
+            fp, why = fp.strip(), why.strip()
+            if not sep or not why:
+                raise BaselineError(
+                    f"{path}:{lineno}: baseline entry needs a "
+                    "justification: '<fingerprint> | <why>'")
+            if fp in entries:
+                raise BaselineError(
+                    f"{path}:{lineno}: duplicate fingerprint {fp}")
+            entries[fp] = why
+    return entries
+
+
+def write_baseline(path: str, findings: list[Finding],
+                   justifications: dict[str, str] | None = None) -> None:
+    """Write a baseline covering ``findings`` (used by ``--write-baseline``
+    to seed the file; the committed justifications are then hand-edited)."""
+    justifications = justifications or {}
+    seen: dict[str, Finding] = {}
+    for f in findings:
+        seen.setdefault(f.fingerprint, f)
+    with open(path, "w", encoding="utf-8") as out:
+        out.write("# repro.analysis baseline -- suppressed findings.\n")
+        out.write("# Format: <fingerprint> | <one-line justification>\n")
+        for fp in sorted(seen):
+            why = justifications.get(fp, "TODO: justify this suppression")
+            out.write(f"{fp} | {why}\n")
+
+
+@dataclasses.dataclass
+class Report:
+    """Result of applying a baseline to a set of findings."""
+
+    new: list[Finding]              # unsuppressed -- these fail the run
+    suppressed: list[Finding]       # matched a baseline entry
+    stale: list[str]                # baseline fingerprints with no finding
+
+    @property
+    def ok(self) -> bool:
+        return not self.new
+
+    def to_json(self) -> dict:
+        return {"new": [f.to_json() for f in self.new],
+                "suppressed": [f.to_json() for f in self.suppressed],
+                "stale": list(self.stale)}
+
+    def render_json(self) -> str:
+        return json.dumps(self.to_json(), indent=2, sort_keys=True)
+
+
+def apply_baseline(findings: list[Finding],
+                   baseline: dict[str, str]) -> Report:
+    new, suppressed, hit = [], [], set()
+    for f in findings:
+        if f.fingerprint in baseline:
+            suppressed.append(f)
+            hit.add(f.fingerprint)
+        else:
+            new.append(f)
+    stale = sorted(set(baseline) - hit)
+    return Report(new=new, suppressed=suppressed, stale=stale)

@@ -1,0 +1,295 @@
+"""Lock-discipline checker (static race detector).
+
+Grammar: a ``# guarded-by: <lock>`` comment on a ``self.<attr> = ...``
+assignment (conventionally in ``__init__``) declares that every later
+read or write of ``self.<attr>`` must happen while ``self.<lock>`` is
+held.  The checker verifies that lexically:
+
+* an access is *locked* when it sits inside a ``with self.<lock>:``
+  block (aliases resolve: ``self._cv = threading.Condition(self._lock)``
+  makes ``with self._cv:`` hold ``_lock``), or when the enclosing method
+  follows the ``*_locked`` naming convention (caller holds the lock), or
+  in ``__init__`` (no concurrent aliases can exist yet);
+* predicate lambdas passed to ``<cond>.wait_for(...)`` inherit the
+  enclosing held set (``Condition.wait_for`` evaluates the predicate
+  with the lock re-acquired); any other nested function is treated as
+  escaping (it may run later, on another thread, without the lock).
+
+Rules:
+
+* **LD001** -- guarded attribute accessed outside its lock.
+* **LD002** -- ``*_locked`` method called from a context that holds no
+  lock (and is not itself ``*_locked``/``__init__``).
+* **LD003** -- ``guarded-by:`` names an attribute that is never assigned
+  a ``threading.Lock``/``RLock``/``Condition`` in the class.
+* **LD004** -- unlocked ``self.<attr> += ...`` in a class that owns a
+  lock and interacts with background threads (the shared-counter
+  lost-update class of bug), even when the attribute is unannotated.
+
+The analysis is lexical and intra-class by design: it cannot prove the
+*absence* of races, but it mechanically enforces the conventions this
+codebase already relies on, and the runtime sanitizer
+(``repro.analysis.sanitize``) cross-checks the same annotations
+dynamically.
+"""
+
+from __future__ import annotations
+
+import ast
+import re
+
+from repro.analysis.findings import Finding
+
+GUARD_RE = re.compile(r"#\s*guarded-by:\s*([A-Za-z_]\w*)")
+
+_LOCK_CTORS = {"Lock", "RLock", "Condition"}
+_THREAD_MARKERS = {"Thread", "BackgroundExecutor", "Timer", "submit",
+                   "start_new_thread"}
+
+
+def _self_attr(node: ast.expr) -> str | None:
+    """``'x'`` when ``node`` is ``self.x``, else None."""
+    if (isinstance(node, ast.Attribute)
+            and isinstance(node.value, ast.Name)
+            and node.value.id == "self"):
+        return node.attr
+    return None
+
+
+def _lock_ctor(value: ast.expr) -> tuple[str | None, str | None]:
+    """(ctor_name, aliased_self_attr) when ``value`` constructs a lock.
+
+    ``threading.Condition(self._lock)`` -> ("Condition", "_lock");
+    ``threading.RLock()`` -> ("RLock", None); anything else (None, None).
+    """
+    if not isinstance(value, ast.Call):
+        return None, None
+    fn = value.func
+    name = None
+    if isinstance(fn, ast.Attribute) and fn.attr in _LOCK_CTORS:
+        name = fn.attr
+    elif isinstance(fn, ast.Name) and fn.id in _LOCK_CTORS:
+        name = fn.id
+    if name is None:
+        return None, None
+    alias = None
+    if value.args:
+        alias = _self_attr(value.args[0])
+    return name, alias
+
+
+class _ClassInfo:
+    def __init__(self, node: ast.ClassDef, lines: list[str]):
+        self.node = node
+        self.name = node.name
+        self.guarded: dict[str, str] = {}      # attr -> declared lock attr
+        self.lock_attrs: set[str] = set()      # attrs holding lock objects
+        self.alias: dict[str, str] = {}        # condition attr -> lock attr
+        self.has_threads = False
+        self._collect(lines)
+
+    def _collect(self, lines: list[str]):
+        for n in ast.walk(self.node):
+            if isinstance(n, (ast.Assign, ast.AnnAssign)):
+                targets = (n.targets if isinstance(n, ast.Assign)
+                           else [n.target])
+                value = n.value
+                attrs = [a for a in map(_self_attr, targets)
+                         if a is not None]
+                if not attrs:
+                    continue
+                if value is not None:
+                    ctor, aliased = _lock_ctor(value)
+                    if ctor is not None:
+                        for a in attrs:
+                            self.lock_attrs.add(a)
+                            if aliased is not None:
+                                self.alias[a] = aliased
+                lock = self._guard_comment(n, lines)
+                if lock is not None:
+                    for a in attrs:
+                        self.guarded[a] = lock
+            elif isinstance(n, ast.Name) and n.id in _THREAD_MARKERS:
+                self.has_threads = True
+            elif isinstance(n, ast.Attribute) and n.attr in _THREAD_MARKERS:
+                self.has_threads = True
+
+    @staticmethod
+    def _guard_comment(n: ast.stmt, lines: list[str]) -> str | None:
+        end = getattr(n, "end_lineno", n.lineno) or n.lineno
+        for lineno in range(n.lineno, end + 1):
+            if lineno - 1 < len(lines):
+                m = GUARD_RE.search(lines[lineno - 1])
+                if m:
+                    return m.group(1)
+        return None
+
+    def resolve(self, lock_attr: str) -> str:
+        """Canonical lock name (conditions resolve to their lock)."""
+        seen = set()
+        while lock_attr in self.alias and lock_attr not in seen:
+            seen.add(lock_attr)
+            lock_attr = self.alias[lock_attr]
+        return lock_attr
+
+
+class _MethodVisitor:
+    """Walk one method, tracking the lexically-held lock set."""
+
+    def __init__(self, checker: "LockChecker", info: _ClassInfo,
+                 fn: ast.FunctionDef):
+        self.checker = checker
+        self.info = info
+        self.fn = fn
+        self.qualname = f"{info.name}.{fn.name}"
+        self.exempt = (fn.name == "__init__"
+                       or fn.name.endswith("_locked"))
+
+    def run(self):
+        for stmt in self.fn.body:
+            self._visit(stmt, frozenset(), nested=False)
+
+    # -- helpers --------------------------------------------------------
+
+    def _with_locks(self, node: ast.With) -> frozenset:
+        held = set()
+        for item in node.items:
+            attr = _self_attr(item.context_expr)
+            if attr is not None and attr in self.info.lock_attrs:
+                held.add(self.info.resolve(attr))
+        return frozenset(held)
+
+    def _report(self, rule: str, node: ast.AST, detail: str, message: str):
+        self.checker.findings.append(Finding(
+            rule=rule, path=self.checker.relpath,
+            line=getattr(node, "lineno", self.fn.lineno),
+            qualname=self.qualname, detail=detail, message=message))
+
+    # -- traversal ------------------------------------------------------
+
+    def _visit(self, node: ast.AST, held: frozenset, nested: bool):
+        if isinstance(node, ast.With):
+            new = held | self._with_locks(node)
+            for item in node.items:
+                self._visit_expr(item.context_expr, held, nested)
+                if item.optional_vars is not None:
+                    self._visit_expr(item.optional_vars, new, nested)
+            for stmt in node.body:
+                self._visit(stmt, new, nested)
+            return
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            # a nested def escapes: it may run later without the lock
+            for stmt in node.body:
+                self._visit(stmt, frozenset(), nested=True)
+            return
+        if isinstance(node, ast.expr):
+            self._visit_expr(node, held, nested)
+            return
+        for child in ast.iter_child_nodes(node):
+            self._visit(child, held, nested)
+
+    def _visit_expr(self, node: ast.expr, held: frozenset, nested: bool):
+        if isinstance(node, ast.Lambda):
+            # predicate lambdas given to Condition.wait_for run with the
+            # lock re-acquired -- handled at the Call site below; a bare
+            # lambda escapes like a nested def
+            self._visit(node.body, frozenset(), nested=True)
+            return
+        if isinstance(node, ast.Call):
+            self._visit_call(node, held, nested)
+            return
+        attr = _self_attr(node)
+        if attr is not None:
+            self._check_attr(node, attr, held, nested)
+        if isinstance(node, ast.Attribute):
+            self._visit_expr(node.value, held, nested)
+            return
+        for child in ast.iter_child_nodes(node):
+            self._visit(child, held, nested)
+
+    def _visit_call(self, node: ast.Call, held: frozenset, nested: bool):
+        callee = _self_attr(node.func)
+        if callee is not None and callee.endswith("_locked"):
+            if not held and not (self.exempt and not nested):
+                self._report(
+                    "LD002", node, callee,
+                    f"'{callee}' called without holding a lock "
+                    "(the _locked suffix promises the caller holds it)")
+        elif callee is not None:
+            self._check_attr(node.func, callee, held, nested)
+        elif isinstance(node.func, ast.Attribute):
+            self._visit_expr(node.func, held, nested)
+        else:
+            self._visit(node.func, held, nested)
+        wait_for = (isinstance(node.func, ast.Attribute)
+                    and node.func.attr in ("wait_for",))
+        for arg in list(node.args) + [kw.value for kw in node.keywords]:
+            if wait_for and isinstance(arg, ast.Lambda):
+                # Condition.wait_for evaluates the predicate locked
+                self._visit(arg.body, held, nested)
+            else:
+                self._visit_expr(arg, held, nested)
+
+    def _check_attr(self, node: ast.AST, attr: str, held: frozenset,
+                    nested: bool):
+        info = self.info
+        if attr in info.guarded:
+            lock = info.resolve(info.guarded[attr])
+            if lock in held or (self.exempt and not nested):
+                pass
+            else:
+                self._report(
+                    "LD001", node, attr,
+                    f"'{attr}' is guarded-by '{info.guarded[attr]}' but "
+                    f"accessed without holding it")
+        # unlocked augmented assignment to ANY self attribute (counter
+        # lost-update class) in a thread-owning, lock-owning class
+        parent = getattr(node, "_ld_parent_augassign", None)
+        if (parent is not None and attr not in info.guarded
+                and info.lock_attrs and info.has_threads
+                and not held and not (self.exempt and not nested)
+                and attr not in info.lock_attrs):
+            self._report(
+                "LD004", node, attr,
+                f"unlocked 'self.{attr} += ...' in a class that owns a "
+                "lock and background threads; increments can be lost "
+                "(annotate guarded-by and lock it, or justify in the "
+                "baseline)")
+
+
+class LockChecker:
+    def __init__(self, relpath: str, tree: ast.Module, source: str):
+        self.relpath = relpath
+        self.tree = tree
+        self.lines = source.splitlines()
+        self.findings: list[Finding] = []
+
+    def run(self) -> list[Finding]:
+        # mark AugAssign targets so the attr check can apply LD004
+        for n in ast.walk(self.tree):
+            if isinstance(n, ast.AugAssign):
+                n.target._ld_parent_augassign = n  # type: ignore[attr-defined]
+        for n in ast.walk(self.tree):
+            if isinstance(n, ast.ClassDef):
+                self._check_class(n)
+        return self.findings
+
+    def _check_class(self, cls: ast.ClassDef):
+        info = _ClassInfo(cls, self.lines)
+        for attr, lock in sorted(info.guarded.items()):
+            if info.resolve(lock) not in info.lock_attrs:
+                self.findings.append(Finding(
+                    rule="LD003", path=self.relpath, line=cls.lineno,
+                    qualname=info.name, detail=f"{attr}->{lock}",
+                    message=f"'{attr}' declares guarded-by '{lock}' but "
+                            f"no lock named '{lock}' is created in "
+                            f"{info.name}"))
+        if not info.guarded and not (info.lock_attrs and info.has_threads):
+            return
+        for stmt in cls.body:
+            if isinstance(stmt, ast.FunctionDef):
+                _MethodVisitor(self, info, stmt).run()
+
+
+def check(relpath: str, tree: ast.Module, source: str) -> list[Finding]:
+    return LockChecker(relpath, tree, source).run()

@@ -1,0 +1,281 @@
+"""Runtime lock sanitizer: the dynamic twin of the static checker.
+
+``REPRO_SANITIZE=1`` turns the ``# guarded-by:`` annotations from
+``repro.analysis.locks`` into *runtime assertions*: every rebind of a
+guarded attribute must happen while the declaring lock is actually held
+by the current thread, and every lock acquisition feeds a global
+acquisition-order graph whose cycles (AB/BA patterns) raise before they
+can deadlock.
+
+Mechanics (no per-instance state, so ``__slots__`` classes work):
+
+* ``instrument(cls)`` parses the class source with the *same*
+  ``_ClassInfo`` grammar the static checker uses -- one annotation
+  language, two enforcement layers -- then patches ``__setattr__`` and
+  ``__init__`` on the class.
+* Lock-valued attributes are wrapped in :class:`LockProxy` at
+  assignment time.  ``threading.Condition(proxy)`` delegates through
+  the proxy's ``acquire``/``release``/``_release_save``/
+  ``_acquire_restore``/``_is_owned`` protocol, so hold counts survive a
+  ``wait()`` and condition-mediated critical sections are tracked too.
+* Hold counts live in a thread-local ``{id(proxy): [proxy, count]}``
+  map; instances under construction are tracked by an ``id`` stack
+  (``__init__`` is exempt, matching the static checker).
+
+The runtime check is *stronger* than the static one where they overlap:
+the static checker trusts a ``*_locked`` suffix, the sanitizer verifies
+the caller really held the lock.  It is also narrower: only attribute
+rebinds are visible to ``__setattr__`` (in-place container mutation is
+the static checker's job).
+
+``maybe_instrument(cls)`` is the zero-overhead production hook: a no-op
+unless ``REPRO_SANITIZE`` is set, so annotated modules can register
+their classes unconditionally.
+"""
+
+from __future__ import annotations
+
+import ast
+import functools
+import inspect
+import os
+import textwrap
+import threading
+
+from repro.analysis.locks import _ClassInfo
+
+ENV_VAR = "REPRO_SANITIZE"
+
+_LOCK_TYPES = (type(threading.Lock()), type(threading.RLock()))
+
+
+class SanitizerError(AssertionError):
+    """A guarded attribute was rebound without its lock, or acquiring a
+    lock would close a cycle in the global acquisition-order graph."""
+
+
+def enabled() -> bool:
+    return os.environ.get(ENV_VAR, "") not in ("", "0")
+
+
+# -- thread-local state ---------------------------------------------------
+
+_tls = threading.local()
+
+
+def _held() -> dict:
+    """``{id(proxy): [proxy, hold_count]}`` for the current thread."""
+    d = getattr(_tls, "held", None)
+    if d is None:
+        d = {}
+        _tls.held = d
+    return d
+
+
+def _init_ids() -> list:
+    """ids of instances whose ``__init__`` is on this thread's stack."""
+    s = getattr(_tls, "init_ids", None)
+    if s is None:
+        s = []
+        _tls.init_ids = s
+    return s
+
+
+# -- global lock-order graph ----------------------------------------------
+
+_order_lock = threading.Lock()
+_order_edges: dict[str, set[str]] = {}
+
+
+def reset_order_graph():
+    """Drop all recorded acquisition-order edges (test isolation)."""
+    with _order_lock:
+        _order_edges.clear()
+
+
+def _reaches(a: str, b: str) -> bool:
+    """True when ``b`` is reachable from ``a`` in the edge graph.
+    Caller holds ``_order_lock``."""
+    stack, seen = [a], {a}
+    while stack:
+        for m in _order_edges.get(stack.pop(), ()):
+            if m == b:
+                return True
+            if m not in seen:
+                seen.add(m)
+                stack.append(m)
+    return False
+
+
+def _note_order(held_names, new_name: str):
+    """Record ``held -> new`` edges; raise when the new acquisition
+    closes a cycle (some thread has taken these locks in the reverse
+    order, i.e. a potential deadlock)."""
+    with _order_lock:
+        for h in held_names:
+            if h == new_name:
+                continue
+            if _reaches(new_name, h):
+                raise SanitizerError(
+                    f"lock-order cycle: acquiring {new_name!r} while "
+                    f"holding {h!r}, but the order {new_name!r} -> "
+                    f"{h!r} was already observed (potential deadlock)")
+            _order_edges.setdefault(h, set()).add(new_name)
+
+
+# -- the proxy ------------------------------------------------------------
+
+class LockProxy:
+    """Wraps a ``threading.Lock``/``RLock``; tracks per-thread hold
+    counts and feeds the acquisition-order graph.  Named by owning
+    class + attribute (``"LsmDB._lock"``), so ordering is checked at
+    class granularity."""
+
+    __slots__ = ("_inner", "name")
+
+    def __init__(self, inner, name: str):
+        self._inner = inner
+        self.name = name
+
+    def held_by_me(self) -> bool:
+        ent = _held().get(id(self))
+        return ent is not None and ent[1] > 0
+
+    def acquire(self, blocking: bool = True, timeout: float = -1):
+        held = _held()
+        ent = held.get(id(self))
+        if ent is None:
+            _note_order([p.name for p, _ in held.values()], self.name)
+        ok = self._inner.acquire(blocking, timeout)
+        if ok:
+            if ent is None:
+                held[id(self)] = [self, 1]
+            else:
+                ent[1] += 1
+        return ok
+
+    def release(self):
+        self._inner.release()
+        held = _held()
+        ent = held.get(id(self))
+        if ent is not None:
+            ent[1] -= 1
+            if ent[1] <= 0:
+                del held[id(self)]
+
+    def __enter__(self):
+        self.acquire()
+        return self
+
+    def __exit__(self, *exc):
+        self.release()
+        return False
+
+    def locked(self):
+        inner = self._inner
+        return inner.locked() if hasattr(inner, "locked") else None
+
+    # -- Condition delegation protocol -----------------------------------
+    # threading.Condition(lock) lifts these from the lock when present,
+    # so a Condition built on a proxy keeps hold counts exact across
+    # wait() (state is an opaque (inner_state, count) pair).
+
+    def _is_owned(self):
+        inner = self._inner
+        if hasattr(inner, "_is_owned"):
+            return inner._is_owned()
+        return self.held_by_me()
+
+    def _release_save(self):
+        ent = _held().pop(id(self), None)
+        count = ent[1] if ent is not None else 0
+        inner = self._inner
+        if hasattr(inner, "_release_save"):
+            state = inner._release_save()
+        else:
+            inner.release()
+            state = None
+        return (state, count)
+
+    def _acquire_restore(self, saved):
+        state, count = saved
+        inner = self._inner
+        if hasattr(inner, "_acquire_restore"):
+            inner._acquire_restore(state)
+        else:
+            inner.acquire()
+        if count:
+            _held()[id(self)] = [self, count]
+
+    def __repr__(self):
+        return f"<LockProxy {self.name} of {self._inner!r}>"
+
+
+# -- class instrumentation ------------------------------------------------
+
+_instrumented: set[type] = set()
+
+
+def _class_info(cls) -> _ClassInfo | None:
+    try:
+        src = textwrap.dedent(inspect.getsource(cls))
+        mod = ast.parse(src)
+    except (OSError, TypeError, SyntaxError):
+        return None
+    node = mod.body[0] if mod.body else None
+    if not isinstance(node, ast.ClassDef):
+        return None
+    return _ClassInfo(node, src.splitlines())
+
+
+def instrument(cls):
+    """Patch ``cls`` in place (returns it, so usable as a decorator):
+    lock attributes wrap in :class:`LockProxy` on assignment, guarded
+    attributes assert their lock on every rebind outside ``__init__``.
+    Idempotent; a no-op for classes with no lock attributes or no
+    retrievable source."""
+    if cls in _instrumented:
+        return cls
+    info = _class_info(cls)
+    if info is None or not info.lock_attrs:
+        return cls
+    guarded = {a: info.resolve(lk) for a, lk in info.guarded.items()}
+    # conditions are not wrapped: built on a proxy, they delegate
+    plain_locks = frozenset(info.lock_attrs - set(info.alias))
+    orig_setattr = cls.__setattr__
+    orig_init = cls.__init__
+    cls_name = cls.__name__
+
+    def __setattr__(self, name, value):
+        if name in plain_locks and isinstance(value, _LOCK_TYPES):
+            value = LockProxy(value, f"{cls_name}.{name}")
+        elif name in guarded and id(self) not in _init_ids():
+            lock = getattr(self, guarded[name], None)
+            if isinstance(lock, LockProxy) and not lock.held_by_me():
+                raise SanitizerError(
+                    f"unsynchronized write: {cls_name}.{name} is "
+                    f"guarded-by {guarded[name]!r} but the current "
+                    "thread does not hold it")
+        orig_setattr(self, name, value)
+
+    @functools.wraps(orig_init)
+    def __init__(self, *args, **kwargs):
+        ids = _init_ids()
+        ids.append(id(self))
+        try:
+            orig_init(self, *args, **kwargs)
+        finally:
+            ids.pop()
+
+    cls.__setattr__ = __setattr__
+    cls.__init__ = __init__
+    _instrumented.add(cls)
+    return cls
+
+
+def maybe_instrument(cls):
+    """Production registration hook: :func:`instrument` when
+    ``REPRO_SANITIZE`` is set, otherwise return ``cls`` untouched."""
+    if enabled():
+        return instrument(cls)
+    return cls

@@ -1,0 +1,419 @@
+"""Tracer-leak / host-sync checker for jit + Pallas code.
+
+Scope discovery (per module, static):
+
+* functions decorated ``@jax.jit`` / ``@functools.partial(jax.jit,
+  static_argnames=(...))`` -- their parameters are traced, minus the
+  ``static_argnames``;
+* module-level ``name = jax.jit(fn, static_argnames=...)`` wrappers over
+  a local ``fn``;
+* kernel bodies handed to ``pl.pallas_call(kernel, ...)`` (directly or
+  via ``functools.partial(kernel, **static)``) -- positional parameters
+  (the refs) are traced, keyword-only parameters are Python values;
+* local functions *reached* from any of the above: taint flows through
+  call sites, so a helper's parameter is traced only when some caller
+  passes it a traced argument.
+
+Within scope, taint propagates forward through names (assignments,
+arithmetic, subscripts, jnp/lax calls) but deliberately NOT through
+``.shape``/``.ndim``/``.dtype``/``len()``/``range()`` (static under
+tracing) or into list/tuple/dict displays (testing a Python container's
+truthiness is fine even when its elements are tracers).
+
+Rules:
+
+* **TL001** -- Python control flow on a traced value (``if``/``while``/
+  ``assert``/ternary/``and``/``or``/``for`` over a tracer): either a
+  trace-time crash or, with shape-dependent values, a silent recompile
+  per distinct outcome.
+* **TL002** -- host round-trip on a traced value (``.item()``,
+  ``.tolist()``, ``float()``/``int()``/``bool()``, ``np.asarray``/
+  ``np.array``): blocks dispatch and poisons the async pipeline.
+* **TL003** -- mutation of Python state under tracing (``global``/
+  ``nonlocal`` rebinding, attribute stores, ``print``): runs once at
+  trace time, not per call -- a silent-wrong-result class of bug.
+"""
+
+from __future__ import annotations
+
+import ast
+
+from repro.analysis.findings import Finding
+
+_SHAPE_ATTRS = {"shape", "ndim", "dtype", "size", "nbytes", "itemsize"}
+_UNTAINT_CALLS = {"len", "range", "isinstance", "enumerate", "zip",
+                  "sorted", "reversed", "type", "getattr", "hasattr"}
+_HOST_SYNC_METHODS = {"item", "tolist", "block_until_ready"}
+_HOST_SYNC_FUNCS = {"float", "int", "bool"}
+_NUMPY_MODULES = {"np", "numpy", "onp"}
+
+
+def _dotted(node: ast.expr) -> str | None:
+    """'jax.jit' for Attribute/Name chains, else None."""
+    parts = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return ".".join(reversed(parts))
+    return None
+
+
+def _is_jax_jit(node: ast.expr) -> bool:
+    return _dotted(node) in ("jax.jit", "jit")
+
+
+def _is_partial(node: ast.expr) -> bool:
+    return _dotted(node) in ("functools.partial", "partial")
+
+
+def _is_pallas_call(node: ast.expr) -> bool:
+    d = _dotted(node)
+    return d is not None and d.split(".")[-1] == "pallas_call"
+
+
+def _static_argnames(call: ast.Call) -> set[str]:
+    out: set[str] = set()
+    for kw in call.keywords:
+        if kw.arg in ("static_argnames", "static_argnums"):
+            for n in ast.walk(kw.value):
+                if isinstance(n, ast.Constant) and isinstance(n.value, str):
+                    out.add(n.value)
+    return out
+
+
+class _FnInfo:
+    def __init__(self, node: ast.FunctionDef, qualname: str):
+        self.node = node
+        self.qualname = qualname
+        self.tainted_params: set[str] = set()
+        self.in_scope = False
+
+    def param_names(self) -> list[str]:
+        a = self.node.args
+        return [p.arg for p in a.posonlyargs + a.args]
+
+    def kwonly_names(self) -> list[str]:
+        return [p.arg for p in self.node.args.kwonlyargs]
+
+
+class TracerChecker:
+    def __init__(self, relpath: str, tree: ast.Module, source: str):
+        self.relpath = relpath
+        self.tree = tree
+        self.findings: list[Finding] = []
+        self.fns: dict[str, _FnInfo] = {}       # bare name -> info
+
+    # -- scope discovery ------------------------------------------------
+
+    def _collect_functions(self):
+        def walk(nodes, prefix):
+            for n in nodes:
+                if isinstance(n, ast.FunctionDef):
+                    q = f"{prefix}{n.name}"
+                    self.fns.setdefault(n.name, _FnInfo(n, q))
+                    walk(n.body, q + ".")
+                elif isinstance(n, ast.ClassDef):
+                    walk(n.body, f"{prefix}{n.name}.")
+        walk(self.tree.body, "")
+
+    def _seed_roots(self) -> list[str]:
+        roots: list[str] = []
+        for info in list(self.fns.values()):
+            statics: set[str] | None = None
+            for dec in info.node.decorator_list:
+                if _is_jax_jit(dec):
+                    statics = set()
+                elif isinstance(dec, ast.Call) and _is_jax_jit(dec.func):
+                    statics = _static_argnames(dec)
+                elif (isinstance(dec, ast.Call) and _is_partial(dec.func)
+                        and dec.args and _is_jax_jit(dec.args[0])):
+                    statics = _static_argnames(dec)
+            if statics is not None:
+                params = set(info.param_names() + info.kwonly_names())
+                info.tainted_params |= params - statics - {"self"}
+                info.in_scope = True
+                roots.append(info.node.name)
+        for n in ast.walk(self.tree):
+            if not isinstance(n, ast.Call):
+                continue
+            # name = jax.jit(local_fn, static_argnames=...)
+            if _is_jax_jit(n.func) and n.args:
+                target = n.args[0]
+                if isinstance(target, ast.Name) and target.id in self.fns:
+                    info = self.fns[target.id]
+                    statics = _static_argnames(n)
+                    params = set(info.param_names() + info.kwonly_names())
+                    info.tainted_params |= params - statics - {"self"}
+                    info.in_scope = True
+                    roots.append(target.id)
+            # pl.pallas_call(kernel | functools.partial(kernel, ...), ...)
+            if _is_pallas_call(n.func) and n.args:
+                k = n.args[0]
+                if (isinstance(k, ast.Call) and _is_partial(k.func)
+                        and k.args):
+                    k = k.args[0]
+                if isinstance(k, ast.Name) and k.id in self.fns:
+                    info = self.fns[k.id]
+                    # positional params are refs (traced); kw-only params
+                    # are Python values bound via functools.partial
+                    info.tainted_params |= set(info.param_names())
+                    info.in_scope = True
+                    roots.append(k.id)
+        return roots
+
+    # -- driver ---------------------------------------------------------
+
+    def run(self) -> list[Finding]:
+        self._collect_functions()
+        queue = self._seed_roots()
+        processed: set[tuple[str, frozenset]] = set()
+        while queue:
+            name = queue.pop()
+            info = self.fns[name]
+            key = (name, frozenset(info.tainted_params))
+            if key in processed:
+                continue
+            processed.add(key)
+            walker = _TaintWalker(self, info)
+            walker.run(report=False)
+            for callee, params in walker.callee_taints.items():
+                cinfo = self.fns.get(callee)
+                if cinfo is None:
+                    continue
+                before = set(cinfo.tainted_params)
+                cinfo.tainted_params |= params
+                cinfo.in_scope = True
+                if cinfo.tainted_params != before or \
+                        (callee, frozenset(cinfo.tainted_params)) \
+                        not in processed:
+                    queue.append(callee)
+        for info in self.fns.values():
+            if info.in_scope:
+                _TaintWalker(self, info).run(report=True)
+        return self.findings
+
+    def report(self, rule: str, node: ast.AST, qualname: str, detail: str,
+               message: str):
+        self.findings.append(Finding(
+            rule=rule, path=self.relpath,
+            line=getattr(node, "lineno", 1),
+            qualname=qualname, detail=detail, message=message))
+
+
+class _TaintWalker:
+    def __init__(self, checker: TracerChecker, info: _FnInfo):
+        self.checker = checker
+        self.info = info
+        self.env: set[str] = set(info.tainted_params)
+        self.callee_taints: dict[str, set[str]] = {}
+        self.reporting = True
+
+    def run(self, report: bool = True):
+        self.reporting = report
+        for stmt in self.info.node.body:
+            self._stmt(stmt)
+
+    # -- taint of expressions -------------------------------------------
+
+    def _taint(self, node: ast.expr | None) -> bool:
+        if node is None:
+            return False
+        if isinstance(node, ast.Name):
+            return node.id in self.env
+        if isinstance(node, ast.Attribute):
+            if node.attr in _SHAPE_ATTRS:
+                return False
+            return self._taint(node.value)
+        if isinstance(node, ast.Subscript):
+            return self._taint(node.value) or self._taint(node.slice)
+        if isinstance(node, (ast.BinOp,)):
+            return self._taint(node.left) or self._taint(node.right)
+        if isinstance(node, ast.UnaryOp):
+            return self._taint(node.operand)
+        if isinstance(node, ast.Compare):
+            # `x is None` / `x is not None` on a tracer is an identity
+            # check, resolved statically at trace time -- not a leak
+            if all(isinstance(op, (ast.Is, ast.IsNot)) for op in node.ops):
+                return False
+            return (self._taint(node.left)
+                    or any(self._taint(c) for c in node.comparators))
+        if isinstance(node, ast.BoolOp):
+            return any(self._taint(v) for v in node.values)
+        if isinstance(node, ast.IfExp):
+            return (self._taint(node.test) or self._taint(node.body)
+                    or self._taint(node.orelse))
+        if isinstance(node, ast.Call):
+            fname = _dotted(node.func)
+            if fname in _UNTAINT_CALLS:
+                return False
+            return (any(self._taint(a) for a in node.args)
+                    or any(self._taint(kw.value) for kw in node.keywords)
+                    or self._taint(node.func))
+        if isinstance(node, ast.Starred):
+            return self._taint(node.value)
+        if isinstance(node, ast.Slice):
+            return (self._taint(node.lower) or self._taint(node.upper)
+                    or self._taint(node.step))
+        # containers/displays/comprehensions: a Python container holding
+        # tracers is itself a Python value (len/truthiness are fine)
+        return False
+
+    # -- statements -----------------------------------------------------
+
+    def _bind(self, target: ast.expr, tainted: bool):
+        if isinstance(target, ast.Name):
+            if tainted:
+                self.env.add(target.id)
+            else:
+                self.env.discard(target.id)
+        elif isinstance(target, (ast.Tuple, ast.List)):
+            for el in target.elts:
+                self._bind(el, tainted)
+        elif isinstance(target, ast.Starred):
+            self._bind(target.value, tainted)
+
+    def _stmt(self, node: ast.stmt):
+        q = self.info.qualname
+        rep = self.checker.report if self.reporting else \
+            (lambda *a, **k: None)
+        if isinstance(node, ast.Assign):
+            self._expr(node.value)
+            t = self._taint(node.value)
+            for target in node.targets:
+                if isinstance(target, ast.Attribute):
+                    rep("TL003", node, q, f"store:{target.attr}",
+                        f"attribute store '{_dotted(target) or target.attr}"
+                        f" = ...' inside jit/pallas scope runs once at "
+                        "trace time, not per call")
+                self._bind(target, t)
+            return
+        if isinstance(node, ast.AugAssign):
+            self._expr(node.value)
+            if isinstance(node.target, ast.Attribute):
+                rep("TL003", node, q, f"store:{node.target.attr}",
+                    "augmented attribute store inside jit/pallas scope "
+                    "runs once at trace time, not per call")
+            self._bind(node.target,
+                       self._taint(node.value) or self._taint(node.target))
+            return
+        if isinstance(node, ast.AnnAssign):
+            if node.value is not None:
+                self._expr(node.value)
+                self._bind(node.target, self._taint(node.value))
+            return
+        if isinstance(node, (ast.If, ast.While)):
+            self._expr(node.test)
+            if self._taint(node.test):
+                rep("TL001", node, q,
+                    f"branch:{ast.unparse(node.test)[:40]}",
+                    "Python control flow on a traced value (crashes at "
+                    "trace time or silently recompiles per outcome); use "
+                    "jnp.where / lax.cond / lax.while_loop")
+            for stmt in node.body + node.orelse:
+                self._stmt(stmt)
+            return
+        if isinstance(node, ast.Assert):
+            if self._taint(node.test):
+                rep("TL001", node, q,
+                    f"assert:{ast.unparse(node.test)[:40]}",
+                    "assert on a traced value inside jit scope; use "
+                    "checkify or a host-side precondition")
+            return
+        if isinstance(node, ast.For):
+            self._expr(node.iter)
+            if self._taint(node.iter):
+                rep("TL001", node, q,
+                    f"for:{ast.unparse(node.iter)[:40]}",
+                    "iterating a traced value unrolls or crashes at "
+                    "trace time; use lax.fori_loop / lax.scan")
+            self._bind(node.target, self._taint(node.iter))
+            for stmt in node.body + node.orelse:
+                self._stmt(stmt)
+            return
+        if isinstance(node, (ast.Global, ast.Nonlocal)):
+            rep("TL003", node, q, f"global:{','.join(node.names)}",
+                "global/nonlocal rebinding inside jit/pallas scope "
+                "mutates Python state at trace time only")
+            return
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            return      # nested defs analyzed via the call graph
+        if isinstance(node, ast.Return):
+            self._expr(node.value)
+            return
+        if isinstance(node, ast.Expr):
+            self._expr(node.value)
+            return
+        for child in ast.iter_child_nodes(node):
+            if isinstance(child, ast.stmt):
+                self._stmt(child)
+            elif isinstance(child, ast.expr):
+                self._expr(child)
+
+    # -- expression-level findings (host syncs, calls) ------------------
+
+    def _expr(self, node: ast.expr | None):
+        if node is None:
+            return
+        q = self.info.qualname
+        rep = self.checker.report if self.reporting else \
+            (lambda *a, **k: None)
+        for n in ast.walk(node):
+            if isinstance(n, ast.IfExp) and self._taint(n.test):
+                rep("TL001", n, q,
+                    f"ternary:{ast.unparse(n.test)[:40]}",
+                    "ternary on a traced value; use jnp.where/lax.cond")
+            if isinstance(n, ast.BoolOp) and \
+                    any(self._taint(v) for v in n.values):
+                rep("TL001", n, q,
+                    f"boolop:{ast.unparse(n)[:40]}",
+                    "and/or coerces a traced value to bool; use "
+                    "jnp.logical_and/or or bitwise &/|")
+            if not isinstance(n, ast.Call):
+                continue
+            fname = _dotted(n.func)
+            args_tainted = (any(self._taint(a) for a in n.args)
+                            or any(self._taint(kw.value)
+                                   for kw in n.keywords))
+            if (isinstance(n.func, ast.Attribute)
+                    and n.func.attr in _HOST_SYNC_METHODS
+                    and self._taint(n.func.value)):
+                rep("TL002", n, q, f"sync:{n.func.attr}",
+                    f".{n.func.attr}() on a traced value forces a host "
+                    "sync (or crashes at trace time)")
+            elif fname in _HOST_SYNC_FUNCS and args_tainted:
+                rep("TL002", n, q, f"sync:{fname}",
+                    f"{fname}() on a traced value forces a host sync "
+                    "(concretization error under jit)")
+            elif (fname is not None and args_tainted
+                    and fname.split(".")[0] in _NUMPY_MODULES):
+                rep("TL002", n, q, f"sync:{fname}",
+                    f"{fname}(...) on a traced value round-trips through "
+                    "host numpy (implicit device sync under jit)")
+            elif fname == "print":
+                rep("TL003", n, q, "print",
+                    "print() inside jit/pallas scope runs at trace time "
+                    "only; use jax.debug.print / pl.debug_print")
+            # propagate taint into local callees
+            if isinstance(n.func, ast.Name) and \
+                    n.func.id in self.checker.fns:
+                self._record_callee(n)
+
+    def _record_callee(self, call: ast.Call):
+        info = self.checker.fns[call.func.id]  # type: ignore[union-attr]
+        params = info.param_names()
+        tset = self.callee_taints.setdefault(call.func.id, set())
+        for i, arg in enumerate(call.args):
+            if isinstance(arg, ast.Starred):
+                break
+            if i < len(params) and self._taint(arg):
+                tset.add(params[i])
+        kw_ok = set(params) | set(info.kwonly_names())
+        for kw in call.keywords:
+            if kw.arg in kw_ok and self._taint(kw.value):
+                tset.add(kw.arg)
+
+
+def check(relpath: str, tree: ast.Module, source: str) -> list[Finding]:
+    return TracerChecker(relpath, tree, source).run()

@@ -33,9 +33,9 @@ class BackgroundExecutor:
         self._q: queue.Queue = queue.Queue()
         self._lock = threading.Lock()
         self._idle = threading.Condition(self._lock)
-        self._pending = 0
-        self._error: BaseException | None = None
-        self._shutdown = False
+        self._pending = 0                             # guarded-by: _lock
+        self._error: BaseException | None = None      # guarded-by: _lock
+        self._shutdown = False                        # guarded-by: _lock
         self._threads = [
             threading.Thread(target=self._run, name=f"{name}-{i}",
                              daemon=True)
@@ -116,8 +116,8 @@ class InstallSequencer:
     def __init__(self):
         self._lock = threading.Lock()
         self._cv = threading.Condition(self._lock)
-        self._next_ticket = 0
-        self._next_install = 0
+        self._next_ticket = 0                         # guarded-by: _lock
+        self._next_install = 0                        # guarded-by: _lock
 
     def issue(self) -> int:
         with self._lock:
@@ -161,14 +161,17 @@ class GlobalCompactionQueue:
         self.tracer = tracer if tracer is not None else NULL_TRACER
         self.metrics = metrics if metrics is not None else NULL_REGISTRY
         self._lock = threading.Lock()
-        self._pending: dict[int, object] = {}   # id(db) -> db
-        self._scheduled = False
-        self._closed = False
+        # id(db) -> db
+        self._pending: dict[int, object] = {}   # guarded-by: _lock
+        self._scheduled = False                 # guarded-by: _lock
+        self._closed = False                    # guarded-by: _lock
         self._exec = BackgroundExecutor(workers=1, name="shard-compact")
-        # accounting for benchmarks/tests
-        self.rounds = 0
-        self.jobs_run = 0
-        self.trivial_moves = 0
+        # accounting for benchmarks/tests; written by the drain worker,
+        # read by foreground threads -- locked so reads are coherent and
+        # increments can never be lost (the PR 6 DBStats bug class)
+        self.rounds = 0                         # guarded-by: _lock
+        self.jobs_run = 0                       # guarded-by: _lock
+        self.trivial_moves = 0                  # guarded-by: _lock
         self._g_depth = self.metrics.gauge(
             "compact.queue.depth",
             help="shards with pending compaction work")
@@ -224,7 +227,8 @@ class GlobalCompactionQueue:
             guard = 0
             while job is not None and db.is_trivial_move(job) and guard < 64:
                 db.apply_trivial_move(job)
-                self.trivial_moves += 1
+                with self._lock:
+                    self.trivial_moves += 1
                 job = db.pick_compaction()
                 guard += 1
             if job is not None:
@@ -233,8 +237,9 @@ class GlobalCompactionQueue:
                              job.bottom_level))
         if not jobs:
             return
-        self.rounds += 1
-        self.jobs_run += len(jobs)
+        with self._lock:
+            self.rounds += 1
+            self.jobs_run += len(jobs)
         with self.tracer.span("compact.round", shards=len(dbs),
                               jobs=len(jobs)):
             results = self.engine.compact_many(jobs)
@@ -314,3 +319,12 @@ class PrefetchReader:
 
     def close(self):
         self._ex.shutdown(wait=True)
+
+
+# REPRO_SANITIZE=1 turns the guarded-by annotations above into runtime
+# assertions (see repro.analysis.sanitize); free when unset.
+from repro.analysis.sanitize import maybe_instrument as _maybe_instrument  # noqa: E402
+
+_maybe_instrument(BackgroundExecutor)
+_maybe_instrument(InstallSequencer)
+_maybe_instrument(GlobalCompactionQueue)

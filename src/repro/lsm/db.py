@@ -171,22 +171,24 @@ class LsmDB:
             on_miss=self._c["block_cache_misses"].inc)
         self.cache = TableCache(self.cfg.table_cache, geom=self.geom,
                                 block_cache=self.block_cache)
-        self.mem = memtable.MemTable()
-        self.imm: list[ImmutableMemTable] = []
+        self.mem = memtable.MemTable()            # guarded-by: _lock
+        self.imm: list[ImmutableMemTable] = []    # guarded-by: _lock
         self._owns_engine = engine is None
         self._compaction_sink = compaction_sink
         self.engine = engine if engine is not None else self._make_engine()
         self._memtable_limit = self.cfg.memtable_bytes or self.geom.sst_bytes
         self._wal_path = os.path.join(path, "wal.log")
-        self._wal_seg_no = 0
-        self._active_extra_wals: list[str] = []
-        self._replay_wal()
-        self._wal = wal.WALWriter(self._wal_path, sync=self.cfg.sync_wal)
+        self._wal_seg_no = 0                      # guarded-by: _lock
+        self._active_extra_wals: list[str] = []   # guarded-by: _lock
+        with self._lock:
+            self._replay_wal_locked()
+        self._wal = wal.WALWriter(self._wal_path,
+                                  sync=self.cfg.sync_wal)  # guarded-by: _lock
         self._async = bool(self.cfg.async_compaction)
         self._install_seq = InstallSequencer()
-        self._compact_scheduled = False
-        self._closed = False
-        self._bg_error: BaseException | None = None
+        self._compact_scheduled = False           # guarded-by: _lock
+        self._closed = False                      # guarded-by: _lock
+        self._bg_error: BaseException | None = None   # guarded-by: _lock
         if self._async:
             self._flush_exec = BackgroundExecutor(
                 workers=max(1, self.cfg.flush_workers), name="flush")
@@ -251,7 +253,7 @@ class LsmDB:
         eng.tracer = self.tracer
         return eng
 
-    def _replay_wal(self):
+    def _replay_wal_locked(self):
         """Replay rotated WAL segments (oldest first), then the active WAL.
         Replayed segments stay on disk until the recovered memtable
         flushes; a crash during recovery loses nothing."""
@@ -281,10 +283,11 @@ class LsmDB:
         assert len(value) <= self.geom.value_bytes - 4
         t0 = time.perf_counter_ns()
         with self._lock:
+            self._check_open_locked()
             seq = self._next_seq()
             self._wal.append(wal.PUT, seq, key, value)
             self.mem.put(key, seq, value)
-            self._maybe_flush()
+            self._maybe_flush_locked()
         # hot path: an atomic counter bump and a lock-free histogram
         # append (drained lazily) -- see tests/test_obs.py overhead check
         dt = time.perf_counter_ns() - t0
@@ -296,17 +299,26 @@ class LsmDB:
 
     def delete(self, key: bytes):
         with self._lock:
+            self._check_open_locked()
             seq = self._next_seq()
             self._wal.append(wal.DELETE, seq, key)
             self.mem.delete(key, seq)
-            self._maybe_flush()
+            self._maybe_flush_locked()
         self._c["deletes"].inc()
+
+    def _check_open_locked(self):
+        """Writes after ``close()`` must fail loudly: the WAL handle is
+        (or is about to be) closed, so accepting the write would either
+        raise a bare ValueError from the file object or -- worse -- land
+        in the memtable with no durability and vanish."""
+        if self._closed:
+            raise IOError("database is closed")
 
     def _next_seq(self) -> int:
         self.versions.last_seq += 1
         return self.versions.last_seq
 
-    def _maybe_flush(self):
+    def _maybe_flush_locked(self):
         if self.mem.approx_bytes < self._memtable_limit:
             return
         if self._async:
@@ -395,13 +407,15 @@ class LsmDB:
         # file number, so a newer memtable must not install below an older
         self._install_seq.wait_turn(entry.ticket)
         try:
-            if self._bg_error is not None:
+            with self._lock:
+                bg_error = self._bg_error
+            if bg_error is not None:
                 # an older memtable failed before our turn came: skip the
                 # install (data stays readable in the immutable queue,
                 # WAL segments stay on disk for replay in rotation order)
                 raise IOError(
                     "flush halted: earlier background flush failed: "
-                    f"{self._bg_error!r}")
+                    f"{bg_error!r}")
             t_inst = time.perf_counter_ns()
             edit = VersionEdit()
             if img is not None:
@@ -881,12 +895,19 @@ class LsmDB:
                         "from the queued memtable)")
 
     def close(self):
+        # claim the close under the lock: concurrent/double close becomes
+        # a no-op, and once _closed is set every put()/delete() fails with
+        # a clean IOError instead of racing the WAL teardown below (the
+        # old unlocked teardown let a late put append to a closed file or
+        # land in the memtable with no durability)
+        with self._lock:
+            if self._closed:
+                return
+            self._closed = True
         try:
             if self._async:
                 self.wait_idle()
         finally:
-            with self._lock:
-                self._closed = True
             if self._async:
                 self._flush_exec.shutdown(wait=False)
                 if self._compact_exec is not None:
@@ -894,10 +915,18 @@ class LsmDB:
             close_engine = getattr(self.engine, "close", None)
             if close_engine and self._owns_engine:
                 close_engine()
-            self._wal.flush()
-            self._wal.close()
-            self.versions.close()
+            with self._lock:
+                self._wal.flush()
+                self._wal.close()
+                self.versions.close()
 
     def level_sizes(self):
         with self._lock:
             return [len(files) for files in self.versions.current.levels]
+
+
+# REPRO_SANITIZE=1 turns the guarded-by annotations above into runtime
+# assertions (see repro.analysis.sanitize); free when unset.
+from repro.analysis.sanitize import maybe_instrument as _maybe_instrument  # noqa: E402
+
+_maybe_instrument(LsmDB)

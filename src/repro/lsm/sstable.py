@@ -269,6 +269,7 @@ class BlockCache:
 
     def __init__(self, capacity: int = 4096, *, on_hit=None, on_miss=None):
         self.capacity = capacity
+        # guarded-by: _lock
         self._c: OrderedDict[tuple[int, int], DecodedBlock] = OrderedDict()
         self._lock = threading.Lock()
         self._on_hit = on_hit
@@ -329,8 +330,8 @@ class TableReader:
         self.geom = geom
         self.block_cache = block_cache
         self._lock = threading.Lock()
-        self._img: SSTImage | None = None
-        self._first_keys: list[bytes] | None = None
+        self._img: SSTImage | None = None             # guarded-by: _lock
+        self._first_keys: list[bytes] | None = None   # guarded-by: _lock
 
     # -- lazy loading ---------------------------------------------------
 
@@ -539,7 +540,7 @@ class TableCache:
         self.capacity = capacity
         self.geom = geom
         self.block_cache = block_cache
-        self._c: OrderedDict[int, TableReader] = OrderedDict()
+        self._c: OrderedDict[int, TableReader] = OrderedDict()  # guarded-by: _lock
         self._lock = threading.Lock()
 
     def reader(self, meta: FileMeta,
@@ -576,3 +577,12 @@ class TableCache:
             self._c.pop(file_no, None)
         if self.block_cache is not None:
             self.block_cache.drop_file(file_no)
+
+
+# REPRO_SANITIZE=1 turns the guarded-by annotations above into runtime
+# assertions (see repro.analysis.sanitize); free when unset.
+from repro.analysis.sanitize import maybe_instrument as _maybe_instrument  # noqa: E402
+
+_maybe_instrument(BlockCache)
+_maybe_instrument(TableReader)
+_maybe_instrument(TableCache)

@@ -73,7 +73,7 @@ class Counter(_Metric):
     def __init__(self, name: str, labels: dict[str, str]):
         super().__init__(name, labels)
         self._lock = threading.Lock()
-        self._v = 0
+        self._v = 0     # guarded-by: _lock
 
     def inc(self, n=1):
         with self._lock:
@@ -96,7 +96,7 @@ class Gauge(_Metric):
     def __init__(self, name: str, labels: dict[str, str]):
         super().__init__(name, labels)
         self._lock = threading.Lock()
-        self._v = 0.0
+        self._v = 0.0   # guarded-by: _lock
 
     def set(self, v):
         with self._lock:
@@ -126,9 +126,11 @@ class Histogram(_Metric):
     def __init__(self, name: str, labels: dict[str, str]):
         super().__init__(name, labels)
         self._lock = threading.Lock()
-        self._counts: dict[int, int] = {}
-        self._count = 0
-        self._sum = 0.0
+        self._counts: dict[int, int] = {}             # guarded-by: _lock
+        self._count = 0                               # guarded-by: _lock
+        self._sum = 0.0                               # guarded-by: _lock
+        # deliberately NOT lock-guarded: deque.append is GIL-atomic and
+        # ``pend`` is the hot-path recording call (see module docstring)
         self._pending: collections.deque = collections.deque()
         self.pend = self._pending.append
 
@@ -212,7 +214,7 @@ class MetricsRegistry:
 
     def __init__(self):
         self._lock = threading.Lock()
-        self._metrics: dict[tuple, _Metric] = {}
+        self._metrics: dict[tuple, _Metric] = {}      # guarded-by: _lock
 
     def _get(self, cls, name: str, labels: dict[str, str]):
         help_text = labels.pop("help", "")   # reserved, not a label
@@ -334,3 +336,13 @@ class NullRegistry:
 
 
 NULL_REGISTRY = NullRegistry()
+
+
+# REPRO_SANITIZE=1 turns the guarded-by annotations above into runtime
+# assertions (see repro.analysis.sanitize); free when unset.
+from repro.analysis.sanitize import maybe_instrument as _maybe_instrument  # noqa: E402
+
+_maybe_instrument(Counter)
+_maybe_instrument(Gauge)
+_maybe_instrument(Histogram)
+_maybe_instrument(MetricsRegistry)

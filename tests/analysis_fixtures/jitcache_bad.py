@@ -1,0 +1,8 @@
+"""Known-bad jit-cache fixture: jitted entry points called with no
+bucketing evidence in the enclosing function."""
+from repro.core import ops
+
+
+def compact_all(runs):
+    merged = ops.merge_runs(runs)       # JC001
+    return ops.sort_tuples(merged)      # JC001

@@ -1,0 +1,33 @@
+"""Known-bad lock-discipline fixture: one violation per rule.
+
+This directory is excluded from the repo-wide analysis walk and from
+pytest collection; tests feed these files to the checkers directly and
+assert the exact findings.
+"""
+import threading
+
+
+class BadCounter:
+    def __init__(self):
+        self._lock = threading.Lock()
+        self._v = 0   # guarded-by: _lock
+        self.hits = 0
+        self._t = threading.Thread(target=self.bump)
+
+    def bump(self):
+        self._v += 1                    # LD001: guarded attr, no lock held
+
+    def bump_locked(self):
+        self._v += 1                    # fine: caller promises the lock
+
+    def call_without_lock(self):
+        self.bump_locked()              # LD002: _locked callee, no lock
+
+    def lost_update(self):
+        self.hits += 1                  # LD004: unlocked counter increment
+
+
+class BadDecl:
+    def __init__(self):
+        self._lock = threading.Lock()
+        self._x = 0   # guarded-by: _mutex  (LD003: no such lock exists)

@@ -1,0 +1,26 @@
+"""Known-good lock-discipline fixture: every guarded access is locked,
+via ``with``, the ``*_locked`` convention, a condition alias, or a
+``wait_for`` predicate lambda.  Must produce zero findings."""
+import threading
+
+
+class GoodCounter:
+    def __init__(self):
+        self._lock = threading.RLock()
+        self._cv = threading.Condition(self._lock)
+        self._v = 0       # guarded-by: _lock
+        self.hits = 0     # guarded-by: _lock
+        self._t = threading.Thread(target=self.bump)
+
+    def bump(self):
+        with self._lock:
+            self._v += 1
+            self._bump_locked()
+
+    def _bump_locked(self):
+        self.hits += 1
+
+    def wait_nonzero(self):
+        with self._cv:
+            self._cv.wait_for(lambda: self._v > 0)
+            return self._v

@@ -1,0 +1,42 @@
+"""Runtime-sanitizer fixture classes.
+
+``Guarded`` deliberately exposes an unlocked write path
+(``set_racy``) so tests can assert :class:`SanitizerError` fires;
+``GuardedTwin`` is an identical, *uninstrumented* control for the
+``maybe_instrument`` no-op test.  Excluded from the repo-wide analysis
+walk (known-bad on purpose).
+"""
+import threading
+
+
+class Guarded:
+    def __init__(self):
+        self._lock = threading.Lock()
+        self._cv = threading.Condition(self._lock)
+        self._v = 0   # guarded-by: _lock
+
+    def set_safely(self, v):
+        with self._lock:
+            self._v = v
+
+    def set_racy(self, v):
+        self._v = v
+
+    def wait_value(self, want, timeout=5.0):
+        with self._cv:
+            return self._cv.wait_for(lambda: self._v == want,
+                                     timeout=timeout)
+
+    def set_and_notify(self, v):
+        with self._cv:
+            self._v = v
+            self._cv.notify_all()
+
+
+class GuardedTwin:
+    def __init__(self):
+        self._lock = threading.Lock()
+        self._v = 0   # guarded-by: _lock
+
+    def set_racy(self, v):
+        self._v = v

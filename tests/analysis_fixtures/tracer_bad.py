@@ -1,0 +1,42 @@
+"""Known-bad tracer fixture: leaks and host syncs in jit/pallas scope.
+Never imported at runtime -- parsed by the checker only."""
+from functools import partial
+
+import jax
+import numpy as np
+
+
+@jax.jit
+def branchy(x):
+    if x > 0:                       # TL001: Python branch on a tracer
+        return x
+    return -x
+
+
+@partial(jax.jit, static_argnames=("mode",))
+def syncy(x, mode):
+    v = x.item()                    # TL002: host sync
+    print(v)                        # TL003: trace-time-only print
+    return x * 2
+
+
+def helper(y):
+    return float(y)                 # TL002: tainted through the call graph
+
+
+@jax.jit
+def calls_helper(x):
+    return helper(x)
+
+
+def kernel(x_ref, o_ref, *, block):
+    for _ in range(block):          # fine: kw-only partial-bound static
+        pass
+    if x_ref[0] > 0:                # TL001: branch on a ref load
+        o_ref[0] = 1.0
+    _ = np.asarray(x_ref)           # TL002: numpy round-trip
+
+
+def launch(x):
+    import jax.experimental.pallas as pl
+    return pl.pallas_call(partial(kernel, block=4), out_shape=x)(x)

@@ -1,0 +1,27 @@
+"""Known-good tracer fixture: static args, shape reads, identity
+checks, and proper lax/jnp idioms.  Must produce zero findings."""
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+
+@partial(jax.jit, static_argnames=("block",))
+def good(x, block):
+    if block > 8:                   # static argument: plain Python value
+        x = x * 2
+    if x is None:                   # identity check: resolved at trace time
+        return jnp.zeros(())
+    for _ in range(x.shape[0]):     # shape is static under tracing
+        x = x + 1
+    return jnp.where(x > 0, x, -x)
+
+
+def helper_static(n):
+    return n + 1
+
+
+@jax.jit
+def calls_static(x):
+    k = helper_static(x.ndim)       # untainted argument: helper stays clean
+    return x * k

@@ -1,0 +1,262 @@
+"""Tests for ``repro.analysis``: golden findings on the fixture corpus,
+baseline semantics, the CLI, and the runtime sanitizer."""
+
+import ast
+import importlib.util
+import pathlib
+import subprocess
+import sys
+import threading
+
+import pytest
+
+import repro.analysis as analysis
+from repro.analysis import jitcache, locks, tracer
+from repro.analysis.__main__ import main as cli_main
+from repro.analysis.findings import (BaselineError, Finding, apply_baseline,
+                                     load_baseline)
+from repro.analysis.sanitize import (LockProxy, SanitizerError, instrument,
+                                     maybe_instrument, reset_order_graph)
+
+REPO = pathlib.Path(__file__).resolve().parent.parent
+FIXTURES = pathlib.Path(__file__).resolve().parent / "analysis_fixtures"
+
+
+def run_checker(check, name):
+    src = (FIXTURES / name).read_text()
+    # a synthetic relpath outside tests/ so path-based exemptions
+    # (jitcache skips test files) do not apply to the fixture corpus
+    return check(f"fx/{name}", ast.parse(src), src)
+
+
+def sig(findings):
+    return {(f.rule, f.qualname, f.detail) for f in findings}
+
+
+# -- lock discipline ------------------------------------------------------
+
+def test_locks_bad_golden():
+    found = sig(run_checker(locks.check, "locks_bad.py"))
+    assert found == {
+        ("LD001", "BadCounter.bump", "_v"),
+        ("LD002", "BadCounter.call_without_lock", "bump_locked"),
+        ("LD004", "BadCounter.lost_update", "hits"),
+        ("LD003", "BadDecl", "_x->_mutex"),
+    }
+
+
+def test_locks_good_clean():
+    assert run_checker(locks.check, "locks_good.py") == []
+
+
+# -- tracer leaks ---------------------------------------------------------
+
+def test_tracer_bad_golden():
+    found = sig(run_checker(tracer.check, "tracer_bad.py"))
+    assert ("TL001", "branchy", "branch:x > 0") in found
+    assert ("TL002", "syncy", "sync:item") in found
+    assert ("TL003", "syncy", "print") in found
+    assert ("TL002", "helper", "sync:float") in found
+    assert ("TL001", "kernel", "branch:x_ref[0] > 0") in found
+    assert ("TL002", "kernel", "sync:np.asarray") in found
+    # nothing else: the range(block) loop over the partial-bound static
+    # must NOT be flagged
+    assert len(found) == 6
+
+
+def test_tracer_good_clean():
+    assert run_checker(tracer.check, "tracer_good.py") == []
+
+
+# -- jit-cache hygiene ----------------------------------------------------
+
+def test_jitcache_bad_golden():
+    found = sig(run_checker(jitcache.check, "jitcache_bad.py"))
+    assert found == {
+        ("JC001", "compact_all", "merge_runs"),
+        ("JC001", "compact_all", "sort_tuples"),
+    }
+
+
+def test_jitcache_good_clean():
+    assert run_checker(jitcache.check, "jitcache_good.py") == []
+
+
+def test_jitcache_test_paths_exempt():
+    src = (FIXTURES / "jitcache_bad.py").read_text()
+    tree = ast.parse(src)
+    assert jitcache.check("tests/test_x.py", tree, src) == []
+
+
+# -- baseline semantics ---------------------------------------------------
+
+def _finding(fp_detail="x"):
+    return Finding(rule="LD001", path="a.py", line=3, qualname="C.m",
+                   detail=fp_detail, message="msg")
+
+
+def test_baseline_requires_justification(tmp_path):
+    p = tmp_path / "b.txt"
+    p.write_text("LD001:a.py:C.m:x\n")
+    with pytest.raises(BaselineError):
+        load_baseline(str(p))
+    p.write_text("LD001:a.py:C.m:x |   \n")
+    with pytest.raises(BaselineError):
+        load_baseline(str(p))
+
+
+def test_baseline_rejects_duplicates(tmp_path):
+    p = tmp_path / "b.txt"
+    p.write_text("F:a | one\nF:a | two\n")
+    with pytest.raises(BaselineError):
+        load_baseline(str(p))
+
+
+def test_apply_baseline_new_suppressed_stale():
+    f1, f2 = _finding("x"), _finding("y")
+    report = apply_baseline([f1, f2], {f1.fingerprint: "why",
+                                       "GONE:z": "stale"})
+    assert report.new == [f2]
+    assert report.suppressed == [f1]
+    assert report.stale == ["GONE:z"]
+    assert not report.ok
+
+
+def test_fingerprint_excludes_line():
+    a = Finding("LD001", "a.py", 3, "C.m", "x", "m1")
+    b = Finding("LD001", "a.py", 99, "C.m", "x", "m2")
+    assert a.fingerprint == b.fingerprint
+
+
+# -- the committed baseline matches a fresh run ---------------------------
+
+def test_repo_baseline_matches_fresh_run():
+    findings = analysis.run_paths(
+        [str(REPO / "src"), str(REPO / "tests")], root=str(REPO))
+    baseline = load_baseline(str(REPO / "analysis-baseline.txt"))
+    report = apply_baseline(findings, baseline)
+    assert [f.render() for f in report.new] == []
+    assert report.stale == []
+
+
+# -- CLI ------------------------------------------------------------------
+
+def test_cli_exit_codes(tmp_path, monkeypatch):
+    bad = tmp_path / "mod.py"
+    bad.write_text((FIXTURES / "locks_bad.py").read_text())
+    monkeypatch.chdir(tmp_path)
+    assert cli_main([str(bad), "--no-baseline"]) == 1
+    # a full baseline (written then justified) makes the run pass
+    assert cli_main([str(bad), "--write-baseline", "b.txt"]) == 0
+    text = (tmp_path / "b.txt").read_text().replace(
+        "TODO: justify this suppression", "fixture corpus")
+    (tmp_path / "b.txt").write_text(text)
+    assert cli_main([str(bad), "--baseline", "b.txt"]) == 0
+    # strict mode fails on stale entries
+    (tmp_path / "b.txt").write_text("GONE:fp | was fixed\n" + text)
+    assert cli_main([str(bad), "--baseline", "b.txt"]) == 0
+    assert cli_main([str(bad), "--baseline", "b.txt", "--strict"]) == 1
+
+
+def test_cli_module_invocation():
+    out = subprocess.run(
+        [sys.executable, "-m", "repro.analysis", "src", "tests",
+         "--strict"],
+        cwd=str(REPO), capture_output=True, text=True)
+    assert out.returncode == 0, out.stdout + out.stderr
+    assert "0 new finding(s)" in out.stdout
+
+
+# -- runtime sanitizer ----------------------------------------------------
+
+def _load_fixture_module():
+    spec = importlib.util.spec_from_file_location(
+        "sanitize_target_fixture", FIXTURES / "sanitize_target.py")
+    mod = importlib.util.module_from_spec(spec)
+    # inspect.getsource (used by instrument) resolves the defining file
+    # through sys.modules[cls.__module__]
+    sys.modules[spec.name] = mod
+    spec.loader.exec_module(mod)
+    return mod
+
+
+@pytest.fixture(scope="module")
+def guarded_cls():
+    mod = _load_fixture_module()
+    return instrument(mod.Guarded)
+
+
+def test_sanitize_wraps_locks(guarded_cls):
+    g = guarded_cls()
+    assert isinstance(g._lock, LockProxy)
+    assert g._lock.name == "Guarded._lock"
+
+
+def test_sanitize_locked_write_ok(guarded_cls):
+    g = guarded_cls()
+    g.set_safely(7)
+    assert g._v == 7
+
+
+def test_sanitize_unlocked_write_raises(guarded_cls):
+    g = guarded_cls()
+    with pytest.raises(SanitizerError, match="guarded-by"):
+        g.set_racy(1)
+
+
+def test_sanitize_init_exempt(guarded_cls):
+    # constructing writes _v without the lock: must not raise
+    g = guarded_cls()
+    assert g._v == 0
+
+
+def test_sanitize_condition_wait_preserves_holds(guarded_cls):
+    g = guarded_cls()
+    t = threading.Thread(target=g.set_and_notify, args=(42,))
+    t.start()
+    assert g.wait_value(42)   # wait() releases/reacquires via the proxy
+    t.join()
+    assert not g._lock.held_by_me()
+
+
+def test_sanitize_idempotent(guarded_cls):
+    assert instrument(guarded_cls) is guarded_cls
+
+
+def test_maybe_instrument_noop_when_disabled(monkeypatch):
+    monkeypatch.delenv("REPRO_SANITIZE", raising=False)
+    mod = _load_fixture_module()
+    cls = maybe_instrument(mod.GuardedTwin)
+    g = cls()
+    g.set_racy(5)             # no sanitizer: plain write succeeds
+    assert g._v == 5
+    assert not isinstance(g._lock, LockProxy)
+
+
+def test_lock_order_cycle_detected():
+    reset_order_graph()
+    try:
+        a = LockProxy(threading.Lock(), "cycle-fixture.A")
+        b = LockProxy(threading.Lock(), "cycle-fixture.B")
+        with a:
+            with b:
+                pass
+        with b:
+            with pytest.raises(SanitizerError, match="lock-order cycle"):
+                a.acquire()
+        assert not a._inner.locked()   # refused before taking the lock
+    finally:
+        reset_order_graph()
+
+
+def test_lock_proxy_reentrant_rlock():
+    reset_order_graph()
+    try:
+        p = LockProxy(threading.RLock(), "cycle-fixture.R")
+        with p:
+            with p:                    # re-entry: no self-edge, count = 2
+                assert p.held_by_me()
+            assert p.held_by_me()
+        assert not p.held_by_me()
+    finally:
+        reset_order_graph()

@@ -377,6 +377,9 @@ def test_sharded_trace_has_stacked_launch(tmp_path):
     db.close()
 
 
+@pytest.mark.skipif(bool(os.environ.get("REPRO_SANITIZE")),
+                    reason="sanitizer __setattr__ interception dominates the "
+                           "put path; perf assertion meaningless under it")
 def test_put_overhead_vs_null_registry(tmp_path):
     """Instrumented put path must stay within 5% of the no-op-registry
     put path (big memtable: no flush noise; best-of trials)."""

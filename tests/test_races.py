@@ -1,0 +1,205 @@
+"""Multi-threaded regression tests for the concurrency defects found by
+``repro.analysis`` (see docs/static_analysis.md).
+
+Each test here failed (or was racy) before its fix:
+
+* ``put()``/``close()`` raced the WAL teardown: a late put could hit a
+  closed file object (``ValueError: I/O operation on closed file``) or
+  land in the memtable with no durability.  ``close()`` now claims the
+  DB under the lock and ``put``/``delete`` fail with a clean ``IOError``.
+* ``GlobalCompactionQueue`` bumped its ``rounds``/``jobs_run``/
+  ``trivial_moves`` counters without the lock (the lost-update class of
+  bug PR 6 fixed for ``DBStats``).
+"""
+
+import threading
+import time
+
+import pytest
+
+from repro.core.background import BackgroundExecutor, GlobalCompactionQueue
+from repro.lsm.db import DBConfig, LsmDB
+
+
+# -- put()/close() race ---------------------------------------------------
+
+def test_put_after_close_raises(tmp_path):
+    db = LsmDB(str(tmp_path / "db"), DBConfig(engine="cpu"))
+    db.put(b"a", b"1")
+    db.close()
+    with pytest.raises(IOError, match="closed"):
+        db.put(b"b", b"2")
+    with pytest.raises(IOError, match="closed"):
+        db.delete(b"a")
+    db.close()   # idempotent
+
+
+def test_concurrent_close_is_idempotent(tmp_path):
+    db = LsmDB(str(tmp_path / "db"), DBConfig(engine="cpu"))
+    db.put(b"a", b"1")
+    errs = []
+
+    def closer():
+        try:
+            db.close()
+        except BaseException as e:  # noqa: BLE001 - collected for assert
+            errs.append(e)
+
+    ts = [threading.Thread(target=closer) for _ in range(8)]
+    for t in ts:
+        t.start()
+    for t in ts:
+        t.join()
+    assert errs == []
+
+
+def test_put_close_race_clean_failure(tmp_path):
+    """8 writers racing close(): every put either succeeds or raises the
+    clean 'database is closed' IOError -- never ValueError from a closed
+    WAL file, never a silent non-durable write."""
+    for rnd in range(3):
+        cfg = DBConfig(engine="cpu", auto_compact=False,
+                       memtable_bytes=1 << 24)   # never flush mid-test
+        db = LsmDB(str(tmp_path / f"db{rnd}"), cfg)
+        errs: list[BaseException] = []
+        started = threading.Barrier(9)
+
+        def writer(tid, db=db, errs=errs, started=started):
+            started.wait()
+            for i in range(10_000):
+                try:
+                    db.put(f"k{tid}-{i}".encode(), b"v")
+                except IOError as e:
+                    if "closed" in str(e):
+                        return
+                    errs.append(e)
+                    return
+                except BaseException as e:  # noqa: BLE001 - asserted below
+                    errs.append(e)
+                    return
+
+        ts = [threading.Thread(target=writer, args=(t,)) for t in range(8)]
+        for t in ts:
+            t.start()
+        started.wait()
+        time.sleep(0.02)          # let writers hit the WAL hot path
+        db.close()
+        for t in ts:
+            t.join()
+        assert errs == []
+
+
+# -- background flush failure halts writes with the root cause ------------
+
+class _BoomEngine:
+    def build_image(self, keys, meta, vals):
+        raise RuntimeError("boom: injected flush failure")
+
+
+def test_bg_error_surfaces_to_writers(tmp_path):
+    cfg = DBConfig(async_compaction=True, auto_compact=False,
+                   memtable_bytes=2048)
+    db = LsmDB(str(tmp_path / "db"), cfg, engine=_BoomEngine())
+    # the first rotation to observe the dead flush re-raises it: either
+    # the raw engine error (executor check) or the IOError wrapper
+    with pytest.raises((IOError, RuntimeError), match="boom|halted"):
+        # bounded so a regression fails the test instead of hanging it
+        for i in range(50_000):
+            db.put(f"k{i:06d}".encode(), b"x" * 64)
+    # queued data stays readable from the immutable memtable
+    assert db.get(b"k000000") == b"x" * 64
+    with pytest.raises((IOError, RuntimeError)):
+        db.close()   # close re-raises the background error once
+
+
+# -- GlobalCompactionQueue counter conservation ---------------------------
+
+class _Job:
+    def __init__(self, trivial):
+        self.trivial = trivial
+        self.all_inputs = ()
+        self.bottom_level = False
+
+
+class _ShardStub:
+    def __init__(self, jobs):
+        self._lock = threading.Lock()
+        self._jobs = list(jobs)
+
+    def pick_compaction(self):
+        with self._lock:
+            return self._jobs.pop(0) if self._jobs else None
+
+    def is_trivial_move(self, job):
+        return job.trivial
+
+    def apply_trivial_move(self, job):
+        pass
+
+    def apply_compaction(self, job, out, es):
+        pass
+
+
+class _CountingEngine:
+    def __init__(self):
+        self._lock = threading.Lock()
+        self.jobs_seen = 0
+
+    def compact_many(self, jobs):
+        with self._lock:
+            self.jobs_seen += len(jobs)
+        return [(None, None) for _ in jobs]
+
+
+def test_queue_counters_conserved_under_notify_storm():
+    n_shards, n_trivial = 6, 3
+    shards = [
+        _ShardStub([_Job(True)] * n_trivial + [_Job(False)])
+        for _ in range(n_shards)]
+    engine = _CountingEngine()
+    q = GlobalCompactionQueue(engine)
+    try:
+        def hammer(db):
+            for _ in range(50):
+                q.notify(db)
+
+        ts = [threading.Thread(target=hammer, args=(s,))
+              for s in shards for _ in range(2)]   # 12 notifying threads
+        for t in ts:
+            t.start()
+        for t in ts:
+            t.join()
+        q.wait_idle()
+        # conservation: every queued job ran exactly once, and the
+        # counters (now lock-guarded) agree with the engine's own count
+        assert q.trivial_moves == n_shards * n_trivial
+        assert q.jobs_run == n_shards
+        assert q.jobs_run == engine.jobs_seen
+        assert q.rounds >= 1
+    finally:
+        q.close()
+
+
+# -- executor conservation (8-thread style, mirrors test_obs) -------------
+
+def test_executor_task_conservation():
+    ex = BackgroundExecutor(workers=4)
+    lock = threading.Lock()
+    state = {"n": 0}
+
+    def task():
+        with lock:
+            state["n"] += 1
+
+    def submitter():
+        for _ in range(200):
+            ex.submit(task)
+
+    ts = [threading.Thread(target=submitter) for _ in range(8)]
+    for t in ts:
+        t.start()
+    for t in ts:
+        t.join()
+    ex.wait_idle()
+    assert state["n"] == 8 * 200
+    ex.shutdown()
