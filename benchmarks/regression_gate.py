@@ -56,10 +56,18 @@ def _ycsb_rows() -> dict:
     replay must clear ``MIN_SMOKE_HIT_RATE`` -- a hit rate of ~0 means
     the cache is broken and every 'fast' number below is a lie).
 
+    ``ycsb.put.p99_under_faults``: chaos mode -- the same smoke with
+    ``flush.build`` failing transiently half the time, so the tail
+    includes in-line retry/backoff and any bg_error halt + resume()
+    round trips.  A blowup here means the self-healing path got slow
+    (or stopped healing: the run must end green, and a clean-path run
+    must show zero engine fallbacks).  See docs/robustness.md.
+
     Sync cpu engine, tiny stores, so this adds a few seconds to emit."""
     import shutil
 
-    from benchmarks.ycsb_bench import measure_latency, measure_multi_get
+    from benchmarks.ycsb_bench import (measure_chaos, measure_latency,
+                                       measure_multi_get)
     db, rep = measure_latency("cpu", async_mode=False, records=120,
                               operations=240, value_size=64)
     db.close()
@@ -77,6 +85,16 @@ def _ycsb_rows() -> dict:
             f"{mg['block_cache_hit_rate']:.1%} below the "
             f"{MIN_SMOKE_HIT_RATE:.0%} floor on a zipfian working set "
             "that fits in cache -- the cache is not caching")
+    ch = measure_chaos("cpu", inject="flush.build:0.5", records=120,
+                       operations=240, value_size=64)
+    if not ch["green"]:
+        raise AssertionError(
+            "chaos smoke: store did not return to green after the "
+            "faults were disarmed -- resume()/drain is broken")
+    if rep["engine_fallbacks"]:
+        raise AssertionError(
+            "clean-path smoke: engine fell back to CPU without any "
+            "injected fault -- silent degradation")
     return {
         "ycsb.get.p99_cpu_smoke": {
             "us": rep["get_percentiles_us"][99.0],
@@ -86,6 +104,15 @@ def _ycsb_rows() -> dict:
             "us": mg["batched_perkey_percentiles_us"][99.0],
             "derived": (f"records=120;ops=240;value=64;batch=32;C;zipfian;"
                         f"hit_rate={mg['block_cache_hit_rate']:.3f}"),
+        },
+        "ycsb.put.p99_under_faults": {
+            "us": ch["put_percentiles_us"][99.0],
+            "derived": (f"records=120;ops=240;value=64;A;chaos="
+                        f"flush.build:0.5;fired="
+                        f"{ch['fired']['flush.build']};"
+                        f"bg_retries={ch['bg_retries']};"
+                        f"resumes={ch['resumes']};"
+                        f"recovery_ms={ch['recovery_seconds'] * 1e3:.1f}"),
         },
     }
 

@@ -217,6 +217,7 @@ def measure_latency(engine: str, *, async_mode: bool, records: int,
         "write_stalls": db.stats.write_stalls,
         "flushes": db.stats.flushes,
         "compactions": db.stats.compactions,
+        "engine_fallbacks": db.stats.engine_fallbacks,
         "path": path, "own_path": own_path, "records": records,
     }
     return db, report
@@ -399,6 +400,9 @@ def measure_sharded(engine: str, *, shards: int, records: int,
             "batch_launches": getattr(eng, "batch_launches", 0),
             "batch_jobs": getattr(eng, "batch_jobs", 0),
             "max_batch_jobs": getattr(eng, "max_batch_jobs", 0),
+            # a clean-path run must never silently degrade to the CPU
+            # fallback engine -- CI asserts this stays 0 (docs/robustness.md)
+            "engine_fallbacks": s.engine_fallbacks,
         }
     except BaseException:
         try:
@@ -432,7 +436,137 @@ def _print_sharded(rep):
           f"batched={rep['batched_compactions']} "
           f"launches={rep['batch_launches']} "
           f"(jobs={rep['batch_jobs']}, max/launch="
-          f"{rep['max_batch_jobs']})")
+          f"{rep['max_batch_jobs']})  "
+          f"engine_fallbacks={rep['engine_fallbacks']}")
+
+
+def measure_chaos(engine: str, *, inject: str, records: int,
+                  operations: int, value_size: int = 128, seed: int = 42,
+                  sort_mode: str = "merge", metrics=None, tracer=None,
+                  max_op_attempts: int = 8) -> dict:
+    """Chaos mode: the YCSB-A workload with probabilistic faults armed.
+
+    ``inject`` is ``name:rate[,name:rate...]`` -- each named failpoint
+    fires a *transient* fault with the given probability (``raise:pRATE``
+    in the spec grammar), so the run exercises the whole self-healing
+    stack: in-line retry/backoff, bg_error halts, ``resume()``, and the
+    device->CPU engine fallback.  Ops that hit a halted store call
+    ``resume()`` and retry; the full wall-clock of every logical op
+    (retries included) lands in its latency sample, so the reported
+    ``put p99`` is the paper-honest tail *under faults*.
+
+    After the workload the failpoints are disarmed and the report's
+    ``recovery_seconds`` measures time-to-green: how long
+    ``resume()`` + drain takes until the store is healthy
+    (``bg_error`` clear, pipeline idle).  See docs/robustness.md."""
+    from repro.lsm import faults
+    specs = {}
+    for part in inject.split(","):
+        name, _, rate = part.partition(":")
+        name = name.strip()
+        if name not in faults.KNOWN_POINTS:
+            raise ValueError(
+                f"unknown failpoint {name!r} "
+                f"(one of {sorted(faults.KNOWN_POINTS)})")
+        specs[name] = f"raise:p{float(rate) if rate else 1.0:g}"
+    path = tempfile.mkdtemp(prefix=f"chaos-{engine}-")
+    # async mode: background failures land as classified bg_error (the
+    # halt/resume contract under test) instead of foreground raises
+    db = LsmDB(path, DBConfig(
+        geom=bench_geometry(value_size), engine=engine,
+        sort_mode=sort_mode, memtable_bytes=8 * 1024,
+        scheduler=SchedulerConfig(l0_trigger=4, base_bytes=128 * 1024),
+        async_compaction=True, failpoints=specs,
+        bg_retry_base_s=1e-4, metrics=metrics, tracer=tracer))
+    spec = WorkloadSpec.ycsb_a(records=records, operations=operations,
+                               value_size=value_size, seed=seed)
+    wl = YCSBWorkload(spec)
+    read_lat, write_lat = [], []
+    resumes = halted_ops = 0
+
+    def apply(op, key, val):
+        # a halted store surfaces BackgroundError/IOError; resume and
+        # retry -- the op's latency sample covers the whole recovery
+        nonlocal resumes, halted_ops
+        for _ in range(max_op_attempts):
+            try:
+                if op == "read":
+                    db.get(key)
+                else:
+                    db.put(key, val)
+                return
+            except (faults.SimulatedCrash, KeyboardInterrupt):
+                raise
+            except Exception:
+                halted_ops += 1
+                if db.resume():
+                    resumes += 1
+        raise RuntimeError(
+            f"store did not recover after {max_op_attempts} attempts")
+
+    t0_run = time.perf_counter()
+    try:
+        for ops in (wl.load_ops(), wl.run_ops()):
+            for op, key, val in ops:
+                t0 = time.perf_counter()
+                apply(op, key, val)
+                dt_us = (time.perf_counter() - t0) * 1e6
+                (read_lat if op == "read" else write_lat).append(dt_us)
+        t_ops = time.perf_counter() - t0_run
+        fired = {n: faults.FAILPOINTS.fired(n) for n in specs}
+        # recovery-time-to-green: disarm, then resume + drain until the
+        # pipeline is idle and healthy
+        faults.FAILPOINTS.clear()
+        t_rec0 = time.perf_counter()
+        green = False
+        for _ in range(64):
+            db.resume()
+            try:
+                db.flush()
+                db.wait_idle()
+            except Exception:
+                continue
+            if db._bg_error is None:
+                green = True
+                break
+        recovery_s = time.perf_counter() - t_rec0
+        s = db.stats
+        eng = db.engine
+        return {
+            "engine": engine, "mode": "chaos", "inject": specs,
+            "fired": fired,
+            "put_percentiles_us": percentiles(write_lat),
+            "get_percentiles_us": percentiles(read_lat),
+            "ops_per_sec": (len(read_lat) + len(write_lat)) / t_ops,
+            "halted_ops": halted_ops, "resumes": resumes,
+            "bg_retries": s.bg_retries, "bg_resumes": s.bg_resumes,
+            "engine_fallbacks": s.engine_fallbacks,
+            "launch_retries": getattr(eng, "launch_retries", 0),
+            "recovery_seconds": recovery_s, "green": green,
+        }
+    finally:
+        faults.FAILPOINTS.clear()
+        try:
+            db.close()
+        except Exception:
+            pass
+        shutil.rmtree(path, ignore_errors=True)
+
+
+def _print_chaos(rep):
+    p, g = rep["put_percentiles_us"], rep["get_percentiles_us"]
+    fired = ", ".join(f"{n} x{c}" for n, c in rep["fired"].items())
+    print(f"engine={rep['engine']} mode=chaos "
+          f"inject={rep['inject']}  fired: {fired}")
+    print(f"  put p50/p99/p99.9 under faults = {p[50.0]:.1f}/{p[99.0]:.1f}/"
+          f"{p[99.9]:.1f}us  get p50/p99 = {g[50.0]:.1f}/{g[99.0]:.1f}us  "
+          f"{rep['ops_per_sec']:.0f} ops/s")
+    print(f"  halted_ops={rep['halted_ops']} resumes={rep['resumes']} "
+          f"bg_retries={rep['bg_retries']} "
+          f"fallbacks={rep['engine_fallbacks']} "
+          f"launch_retries={rep['launch_retries']}")
+    print(f"  recovery-time-to-green: {rep['recovery_seconds'] * 1e3:.1f}ms "
+          f"({'GREEN' if rep['green'] else 'STILL RED'})")
 
 
 def _fmt_row(rep):
@@ -592,6 +726,11 @@ def main(argv=None):
                          "own -- zipfian for A/B/C, latest for D)")
     ap.add_argument("--zipfian", action="store_true",
                     help="shorthand for --distribution zipfian")
+    ap.add_argument("--inject", default=None, metavar="NAME:RATE",
+                    help="chaos mode: arm failpoints (comma-separated "
+                         "name:rate, e.g. flush.build:0.25) and report "
+                         "put p99 under faults + recovery-time-to-green "
+                         "(docs/robustness.md)")
     ap.add_argument("--records", type=int, default=400)
     ap.add_argument("--operations", type=int, default=800)
     ap.add_argument("--value-size", type=int, default=128)
@@ -609,6 +748,15 @@ def main(argv=None):
     if args.zipfian:
         args.distribution = "zipfian"
     metrics, tracer = _make_obs(args)
+    if args.inject:
+        rep = measure_chaos(
+            args.engine, inject=args.inject, records=args.records,
+            operations=args.operations, value_size=args.value_size,
+            seed=args.seed, sort_mode=args.sort_mode, metrics=metrics,
+            tracer=tracer)
+        _print_chaos(rep)
+        _export_obs(args, metrics, tracer)
+        return 0 if rep["green"] else 1
     if args.multi_get > 0:
         rep = measure_multi_get(
             args.engine, records=args.records, operations=args.operations,

@@ -219,6 +219,8 @@ class GlobalCompactionQueue:
     def _drain_round(self, dbs):
         """Pick <=1 real job per shard, batch-compact, install per shard.
         Shards that yielded a job are re-queued (they may have more)."""
+        from repro.lsm import faults
+        faults.fire("compact.round")
         owners, jobs = [], []
         for db in dbs:
             job = db.pick_compaction()

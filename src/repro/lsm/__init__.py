@@ -64,4 +64,13 @@ def __getattr__(name):  # lazy: avoids core.scheduler <-> lsm.db cycle
     if name in ("TableReader", "TableCache", "BlockCache"):
         from repro.lsm import sstable
         return getattr(sstable, name)
+    if name in ("FaultInjected", "SimulatedCrash", "BackgroundError",
+                "FailpointRegistry", "FAILPOINTS"):
+        from repro.lsm import faults
+        return getattr(faults, name)
+    if name in ("repair_sharded", "RepairReport"):
+        # NOTE: the repair *function* is repro.lsm.repair.repair -- the
+        # bare name would shadow the submodule, so it is not re-exported
+        from repro.lsm import repair as repair_mod
+        return getattr(repair_mod, name)
     raise AttributeError(name)

@@ -20,6 +20,7 @@ import time
 import numpy as np
 
 from repro.core.formats import SSTGeometry, SSTImage
+from repro.lsm import faults
 from repro.obs.trace import NULL_TRACER
 
 U32 = np.uint32
@@ -196,6 +197,8 @@ class EngineStats:
     device_seconds: float = 0.0
     sort_seconds: float = 0.0
     batched: bool = False   # produced by a stacked multi-job launch
+    fallback: bool = False  # completed via the CPU degraded mode after
+    #   the device launch failed (docs/robustness.md)
 
 
 class CpuCompactionEngine:
@@ -367,6 +370,12 @@ class DeviceCompactionEngine:
         self.batch_launches = 0
         self.batch_jobs = 0
         self.max_batch_jobs = 0
+        # degraded-mode accounting: a failed (or CRC-failed) device launch
+        # retries once, then the job completes through a CPU engine that
+        # emits bit-identical output (docs/robustness.md)
+        self._cpu = None            # lazy CpuCompactionEngine
+        self.fallbacks = 0          # jobs completed via the CPU fallback
+        self.launch_retries = 0     # device launches retried before fallback
 
     def close(self):
         if self._reader is not None:
@@ -381,14 +390,52 @@ class DeviceCompactionEngine:
         else:
             self.jit_bucket_misses += 1
 
+    def _cpu_engine(self) -> CpuCompactionEngine:
+        """The lazily-built degraded-mode twin (bit-identical output)."""
+        if self._cpu is None:
+            self._cpu = CpuCompactionEngine(self.geom, tracer=self.tracer)
+        return self._cpu
+
+    def _with_fallback(self, attempt, fallback):
+        """Run one compaction job with launch resilience: a failed device
+        attempt (exception or negative CRC verdict) retries once, then
+        the job completes through the CPU engine -- whose output is
+        bit-identical by construction, so degraded mode changes latency,
+        never bytes.  ``SimulatedCrash`` propagates: a process death is
+        not a launch failure.  A genuinely corrupt input fails CRC on the
+        CPU too, so ``apply_compaction``'s inputs-retained abort is
+        preserved, just with an authoritative host verdict."""
+        for is_retry in (False, True):
+            if is_retry:
+                self.launch_retries += 1
+            try:
+                out, es = attempt()
+                if es.crc_ok:
+                    return out, es
+            except faults.SimulatedCrash:
+                raise
+            except Exception:
+                pass
+        self.fallbacks += 1
+        with self.tracer.span("compact.fallback", engine="cpu"):
+            out, es = fallback()
+        es.fallback = True
+        return out, es
+
     def compact(self, images, *, bottom_level: bool = False):
-        import jax.numpy as jnp
-        t0 = time.perf_counter()  # H2D staging counts as host work
-        imgs = [SSTImage(*(jnp.asarray(np.asarray(a)) for a in im))
-                for im in images]
-        real_blocks = sum(np.asarray(im.keys).shape[0] for im in images)
-        return self._compact_staged(imgs, real_blocks,
-                                    bottom_level=bottom_level, t0=t0)
+        def attempt():
+            import jax.numpy as jnp
+            t0 = time.perf_counter()  # H2D staging counts as host work
+            imgs = [SSTImage(*(jnp.asarray(np.asarray(a)) for a in im))
+                    for im in images]
+            real_blocks = sum(np.asarray(im.keys).shape[0] for im in images)
+            return self._compact_staged(imgs, real_blocks,
+                                        bottom_level=bottom_level, t0=t0)
+
+        return self._with_fallback(
+            attempt,
+            lambda: self._cpu_engine().compact(images,
+                                               bottom_level=bottom_level))
 
     def compact_paths(self, paths: list[str], *, bottom_level: bool = False):
         """Compact straight from SST files, double-buffering host reads:
@@ -396,20 +443,26 @@ class DeviceCompactionEngine:
         already reading file *i+1* -- and because JAX dispatch is async,
         the first reads of this job overlap the device tail of the
         previous one (the paper's cross-job "judicious data movement")."""
-        import jax.numpy as jnp
+        def attempt():
+            import jax.numpy as jnp
 
-        from repro.core.background import PrefetchReader
-        from repro.lsm import sstable
-        t0 = time.perf_counter()
-        if self._reader is None:
-            self._reader = PrefetchReader()
-        with self.tracer.span("compact.read_inputs", files=len(paths)):
-            imgs, real_blocks = [], 0
-            for im in self._reader.read_all(paths, sstable.read_sst):
-                real_blocks += im.keys.shape[0]
-                imgs.append(SSTImage(*(jnp.asarray(a) for a in im)))
-        return self._compact_staged(imgs, real_blocks,
-                                    bottom_level=bottom_level, t0=t0)
+            from repro.core.background import PrefetchReader
+            from repro.lsm import sstable
+            t0 = time.perf_counter()
+            if self._reader is None:
+                self._reader = PrefetchReader()
+            with self.tracer.span("compact.read_inputs", files=len(paths)):
+                imgs, real_blocks = [], 0
+                for im in self._reader.read_all(paths, sstable.read_sst):
+                    real_blocks += im.keys.shape[0]
+                    imgs.append(SSTImage(*(jnp.asarray(a) for a in im)))
+            return self._compact_staged(imgs, real_blocks,
+                                        bottom_level=bottom_level, t0=t0)
+
+        return self._with_fallback(
+            attempt,
+            lambda: self._cpu_engine().compact_paths(
+                paths, bottom_level=bottom_level))
 
     def compact_many(self, jobs: list[tuple[list[str], bool]]
                      ) -> list[tuple[SSTImage, EngineStats]]:
@@ -453,9 +506,10 @@ class DeviceCompactionEngine:
 
         results: list = [None] * len(jobs)
         read_share = t_read / max(1, len(jobs))
-        for sig, idxs in groups.items():
-            if len(idxs) == 1:
-                j = idxs[0]
+
+        def single(j):
+            """One prefetched job through the device path (+ fallback)."""
+            def attempt():
                 t0 = time.perf_counter()
                 imgs = [SSTImage(*(jnp.asarray(a) for a in im))
                         for im in job_imgs[j]]
@@ -463,13 +517,40 @@ class DeviceCompactionEngine:
                     imgs, sum(job_blocks[j]), bottom_level=jobs[j][1],
                     t0=t0)
                 es.host_seconds += read_share
-                results[j] = (out, es)
+                return out, es
+
+            return self._with_fallback(
+                attempt,
+                lambda: self._cpu_engine().compact(
+                    job_imgs[j], bottom_level=jobs[j][1]))
+
+        for sig, idxs in groups.items():
+            if len(idxs) == 1:
+                results[idxs[0]] = single(idxs[0])
                 continue
-            results_group = self._compact_batched(
-                [job_imgs[j] for j in idxs], bucket=sig[1],
-                bottom_level=jobs[idxs[0]][1], read_share=read_share)
-            for j, res in zip(idxs, results_group):
-                results[j] = res
+            try:
+                results_group = self._compact_batched(
+                    [job_imgs[j] for j in idxs], bucket=sig[1],
+                    bottom_level=jobs[idxs[0]][1], read_share=read_share)
+            except faults.SimulatedCrash:
+                raise
+            except Exception:
+                # the stacked launch died: isolate by re-running the
+                # group's jobs one by one (device retry + CPU fallback
+                # per job), so one bad launch cannot wedge every shard
+                self.launch_retries += 1
+                results_group = None
+            if results_group is None:
+                for j in idxs:
+                    results[j] = single(j)
+            else:
+                for j, res in zip(idxs, results_group):
+                    if not res[1].crc_ok:
+                        # per-job negative verdict inside a batch: get an
+                        # authoritative single-job verdict (still fails
+                        # for genuinely corrupt inputs -- on the CPU)
+                        res = single(j)
+                    results[j] = res
         if self.tracer.enabled:
             self.tracer.complete(
                 "compact_many", t_many0,
@@ -500,8 +581,10 @@ class DeviceCompactionEngine:
         self.max_batch_jobs = max(self.max_batch_jobs, n_jobs)
         t_exec0 = time.perf_counter()
         t_exec0_ns = time.perf_counter_ns()
+        faults.fire("engine.launch")
         outs = self.executor.compact_many(staged, bottom_level=bottom_level,
                                           pad_blocks=bucket)
+        faults.fire("engine.crc")
         outs = [(SSTImage(*(np.asarray(a) for a in out)), s)
                 for out, s in outs]
         exec_wall = time.perf_counter() - t_exec0
@@ -557,8 +640,10 @@ class DeviceCompactionEngine:
         # supplies the accelerator time) -- time it separately
         t_exec0 = time.perf_counter()
         t_exec0_ns = time.perf_counter_ns()
+        faults.fire("engine.launch")
         out, s = self.executor.compact(imgs, bottom_level=bottom_level,
                                        pad_blocks=bucket)
+        faults.fire("engine.crc")
         out = SSTImage(*(np.asarray(a) for a in out))
         exec_wall = time.perf_counter() - t_exec0
         wire = self.geom.wire_words_per_block * 4

@@ -34,7 +34,9 @@ from repro.core.scheduler import (CompactionJob, CompactionScheduler,
                                   SchedulerConfig)
 from repro.lsm import DEFAULT_READ_OPTIONS, ReadOptions
 from repro.lsm import cpu_engine as ce
+from repro.lsm import faults
 from repro.lsm import memtable
+from repro.lsm.faults import BackgroundError
 from repro.lsm import read as lsm_read
 from repro.lsm import sstable, wal
 from repro.lsm.memtable import ImmutableMemTable
@@ -58,6 +60,10 @@ class DBConfig:
     table_cache: int = 64
     block_cache_blocks: int = 4096  # host LRU of decoded blocks (0 = off)
     sync_wal: bool = False
+    sync_writes: bool = False       # full durability for acks: fsync every
+    #   WAL append AND the parent-directory entries of created/renamed
+    #   files (the crash-consistency matrix runs with this on; see
+    #   docs/robustness.md)
     auto_compact: bool = True
     async_compaction: bool = False  # non-blocking writes + bg flush/compact
     flush_workers: int = 1          # image builds overlap; installs ordered
@@ -65,6 +71,11 @@ class DBConfig:
     metrics: object | None = None   # obs.MetricsRegistry (None -> private
     #   registry; pass obs.NULL_REGISTRY to opt out of instrumentation)
     tracer: object | None = None    # obs.Tracer (None -> NULL_TRACER)
+    failpoints: object | None = None    # fault-injection spec (str | dict),
+    #   installed into the process-global registry at open -- see
+    #   repro.lsm.faults and docs/robustness.md
+    bg_max_retries: int = 3         # transient background-failure retries
+    bg_retry_base_s: float = 0.005  # backoff base (doubles + jitter)
 
 
 @dataclasses.dataclass
@@ -98,6 +109,10 @@ class DBStats:
     block_cache_misses: int = 0
     write_stalls: int = 0
     batched_compactions: int = 0   # jobs installed from a stacked launch
+    bg_retries: int = 0            # transient background-failure retries
+    bg_resumes: int = 0            # resume() calls that cleared a bg_error
+    orphans_removed: int = 0       # stale .tmp / unreferenced SSTs GC'd
+    engine_fallbacks: int = 0      # compactions installed via CPU fallback
 
     def add(self, other: "DBStats") -> "DBStats":
         """Field-wise sum (aggregation across shards)."""
@@ -154,6 +169,8 @@ class LsmDB:
         """
         self.path = path
         self.cfg = cfg or DBConfig()
+        if self.cfg.failpoints is not None:
+            faults.FAILPOINTS.install(self.cfg.failpoints)
         os.makedirs(path, exist_ok=True)
         self.geom = self.cfg.geom
         self._lock = threading.RLock()
@@ -180,15 +197,17 @@ class LsmDB:
         self._wal_path = os.path.join(path, "wal.log")
         self._wal_seg_no = 0                      # guarded-by: _lock
         self._active_extra_wals: list[str] = []   # guarded-by: _lock
+        self._wal_sync = self.cfg.sync_wal or self.cfg.sync_writes
         with self._lock:
             self._replay_wal_locked()
+            self._gc_orphans_locked()
         self._wal = wal.WALWriter(self._wal_path,
-                                  sync=self.cfg.sync_wal)  # guarded-by: _lock
+                                  sync=self._wal_sync)  # guarded-by: _lock
         self._async = bool(self.cfg.async_compaction)
         self._install_seq = InstallSequencer()
         self._compact_scheduled = False           # guarded-by: _lock
         self._closed = False                      # guarded-by: _lock
-        self._bg_error: BaseException | None = None   # guarded-by: _lock
+        self._bg_error: BackgroundError | None = None   # guarded-by: _lock
         if self._async:
             self._flush_exec = BackgroundExecutor(
                 workers=max(1, self.cfg.flush_workers), name="flush")
@@ -198,6 +217,21 @@ class LsmDB:
                 BackgroundExecutor(workers=1, name="compact")
         else:
             self._flush_exec = self._compact_exec = None
+
+    @classmethod
+    def open(cls, path: str, cfg: DBConfig | None = None, *,
+             repair: bool = False, **kw) -> "LsmDB":
+        """Open a store, optionally running crash repair first.
+
+        ``repair=True`` runs :func:`repro.lsm.repair.repair` on the
+        directory before opening: corrupt SSTs are quarantined to
+        ``lost/``, torn WAL tails truncated, and the MANIFEST rebuilt
+        from surviving files (also available offline as
+        ``python -m repro.lsm.repair <dir>``)."""
+        if repair and os.path.isdir(path):
+            from repro.lsm import repair as repair_mod
+            repair_mod.repair(path)
+        return cls(path, cfg, **kw)
 
     def _init_obs(self, metrics, tracer, metric_labels):
         """Registry counters supersede the old ad-hoc ``DBStats`` fields:
@@ -224,6 +258,9 @@ class LsmDB:
                                                    op="multi_get", **labels)
         self._g_imm = self.metrics.gauge("lsm.imm_queue.depth", **labels)
         self._g_debt = self.metrics.gauge("lsm.compaction.debt", **labels)
+        # 0 = healthy, 1 = transient bg_error (resume() recovers),
+        # 2 = hard bg_error (run repair first) -- docs/robustness.md
+        self._g_bg_error = self.metrics.gauge("lsm.bg_error", **labels)
 
     @property
     def stats(self) -> DBStats:
@@ -270,6 +307,35 @@ class LsmDB:
                 else:
                     self.mem.delete(key, seq)
                 self.versions.last_seq = max(self.versions.last_seq, seq)
+
+    def _gc_orphans_locked(self):
+        """Delete crash leftovers: stale ``*.tmp`` files and SSTs no
+        version references.  Safe because an unreferenced SST is either a
+        flush that never logged its edit (its data is still in the WAL we
+        just replayed) or a compaction input whose deletion crashed
+        mid-unlink (its data lives in the installed outputs)."""
+        live = {fm.file_no for _, fm in self.versions.current.all_files()}
+        removed = 0
+        for name in os.listdir(self.path):
+            p = os.path.join(self.path, name)
+            if not os.path.isfile(p):
+                continue
+            stale = False
+            if name.endswith(".tmp"):
+                stale = True
+            elif name.endswith(".sst"):
+                try:
+                    stale = int(name[:-4]) not in live
+                except ValueError:
+                    continue
+            if stale:
+                try:
+                    os.remove(p)
+                    removed += 1
+                except FileNotFoundError:
+                    pass
+        if removed:
+            self._c["orphans_removed"].inc(removed)
 
     # ------------------------------------------------------------------
     # writes
@@ -337,7 +403,8 @@ class LsmDB:
         self._flush_exec.check()
         if self._bg_error is not None:
             raise IOError("writes halted: a background flush failed "
-                          f"earlier: {self._bg_error!r}")
+                          f"earlier: {self._bg_error!r}; call resume() "
+                          "to restart the pipeline")
         tr = self.tracer
         while len(self.imm) >= self.cfg.max_pending_memtables:
             self._c["write_stalls"].inc()
@@ -355,12 +422,15 @@ class LsmDB:
                               "draining (background flush dead?)")
             if self._bg_error is not None:
                 raise IOError("writes halted: a background flush failed "
-                              f"while stalled: {self._bg_error!r}")
+                              f"while stalled: {self._bg_error!r}; call "
+                              "resume() to restart the pipeline")
         t_rot = time.perf_counter_ns()
         self._wal.close()
         self._wal_seg_no += 1
         seg = os.path.join(self.path, f"wal-{self._wal_seg_no:06d}.log")
         os.rename(self._wal_path, seg)
+        if self._wal_sync:
+            faults.fsync_dir(self.path)   # segment rename durability
         entry = ImmutableMemTable(
             table=self.mem,
             wal_paths=self._active_extra_wals + [seg],
@@ -368,7 +438,7 @@ class LsmDB:
         self._active_extra_wals = []
         self.imm.append(entry)
         self.mem = memtable.MemTable()
-        self._wal = wal.WALWriter(self._wal_path, sync=self.cfg.sync_wal)
+        self._wal = wal.WALWriter(self._wal_path, sync=self._wal_sync)
         self._sample_pressure_locked()
         if tr.enabled:
             tr.complete("memtable.rotate", t_rot,
@@ -376,33 +446,94 @@ class LsmDB:
                         args=self._span_args)
         self._flush_exec.submit(self._background_flush, entry)
 
-    def _set_bg_error(self, err: BaseException):
+    def _set_bg_error(self, err: BaseException,
+                      op: str = "flush") -> BaseException:
+        """Record the first background error (classified, resume-able) and
+        wake stalled writers.  Returns the error the caller should raise:
+        the classified wrapper, except ``SimulatedCrash`` which must stay
+        a BaseException (the crash matrix relies on it being uncatchable
+        by ``except Exception``)."""
+        if not isinstance(err, (BackgroundError, faults.SimulatedCrash)):
+            err = BackgroundError(op, err)
         with self._lock:
-            if self._bg_error is None:
+            if self._bg_error is None and \
+                    isinstance(err, BackgroundError):
                 self._bg_error = err
+                self._g_bg_error.set(1 if err.severity == "transient" else 2)
             # wake writers stalled on a full immutable queue -- it will
             # never drain now, and they should fail with the root cause
             self._imm_cv.notify_all()
+        return err
+
+    def resume(self) -> bool:
+        """Clear a background error and restart the halted pipeline.
+
+        Re-issues install tickets for every memtable still parked on the
+        immutable queue (in rotation order) and resubmits their flushes,
+        then reschedules compaction.  Returns True when an error was
+        cleared.  For a hard error (corruption) the damage is still on
+        disk -- run repair first (docs/robustness.md)."""
+        t0 = time.perf_counter_ns()
+        if self._async:
+            # drain in-flight background work first: anything still queued
+            # is failing/skipping against the standing bg_error, and its
+            # errors are exactly the condition being cleared
+            try:
+                self._flush_exec.wait_idle()
+            except Exception:
+                pass
+        with self._lock:
+            err = self._bg_error
+            if err is None:
+                return False
+            self._bg_error = None
+            self._g_bg_error.set(0)
+            resub = [dataclasses.replace(e, ticket=self._install_seq.issue())
+                     for e in self.imm]
+            self.imm = resub
+            self._imm_cv.notify_all()
+        self._c["bg_resumes"].inc()
+        for e in resub:
+            self._flush_exec.submit(self._background_flush, e)
+        if self.cfg.auto_compact and \
+                (self._async or self._compaction_sink is not None):
+            self._schedule_compaction()
+        tr = self.tracer
+        if tr.enabled:
+            tr.complete("db.resume", t0, time.perf_counter_ns() - t0,
+                        args={"cleared": repr(err), "requeued": len(resub),
+                              **(self._span_args or {})})
+        return True
 
     def _background_flush(self, entry: ImmutableMemTable):
         t0 = time.perf_counter()
-        try:
+
+        def build():
             with self.tracer.span("flush.build", **(self._span_args or {})):
                 entries = entry.table.sorted_entries()
-                img = None
-                if entries:
-                    keys, meta, vals = self._pack_entries(entries)
-                    img = self.engine.build_image(keys, meta, vals)
+                faults.fire("flush.build")
+                if not entries:
+                    return None
+                keys, meta, vals = self._pack_entries(entries)
+                return self.engine.build_image(keys, meta, vals)
+
+        try:
+            # transient build failures (I/O hiccups, injected soft faults)
+            # retry in-line with backoff before escalating to bg_error
+            img = faults.with_retries(
+                build, retries=self.cfg.bg_max_retries,
+                base_s=self.cfg.bg_retry_base_s,
+                on_retry=self._c["bg_retries"].inc)
         except BaseException as e:
             # halt the flush pipeline (RocksDB-style bg_error): a younger
             # memtable must NOT install beneath this still-queued older
             # one, or its data would permanently shadow newer L0 data.
             # Consume our ticket so waiters aren't wedged; the entry stays
             # queued and readable.
-            self._set_bg_error(e)
+            err = self._set_bg_error(e)
             self._install_seq.wait_turn(entry.ticket)
             self._install_seq.done(entry.ticket)
-            raise
+            raise err
         # installs land in rotation order: L0 reads resolve overwrites by
         # file number, so a newer memtable must not install below an older
         self._install_seq.wait_turn(entry.ticket)
@@ -442,8 +573,7 @@ class LsmDB:
                 except FileNotFoundError:
                     pass
         except BaseException as e:
-            self._set_bg_error(e)
-            raise
+            raise self._set_bg_error(e)
         finally:
             self._install_seq.done(entry.ticket)
         if self.cfg.auto_compact:
@@ -651,6 +781,7 @@ class LsmDB:
                 return
             t0 = time.perf_counter()
             with self.tracer.span("flush.sync", **(self._span_args or {})):
+                faults.fire("flush.build")
                 keys, meta, vals = self._pack_entries(
                     self.mem.sorted_entries())
                 img = self.engine.build_image(keys, meta, vals)
@@ -664,7 +795,7 @@ class LsmDB:
                         pass
                 self._active_extra_wals = []
                 self._wal = wal.WALWriter(self._wal_path,
-                                          sync=self.cfg.sync_wal)
+                                          sync=self._wal_sync)
             self._c["flushes"].inc()
             self._c["flush_host_seconds"].add(time.perf_counter() - t0)
             self._sample_pressure_locked()
@@ -735,17 +866,25 @@ class LsmDB:
                     if job is None:
                         self._compact_scheduled = False
                         return
-                self.compact_job(job)
+                # transient failures (I/O hiccups, injected soft faults)
+                # retry with backoff; hard ones (CRC) propagate untouched
+                faults.with_retries(
+                    lambda: self.compact_job(job),
+                    retries=self.cfg.bg_max_retries,
+                    base_s=self.cfg.bg_retry_base_s,
+                    on_retry=self._c["bg_retries"].inc)
                 if self.cfg.scheduler.paper_faithful:
                     # the paper's artifact (§IV-C): at most one job per
                     # flush -- don't drain the scheduler
                     with self._lock:
                         self._compact_scheduled = False
                     return
-        except BaseException:
+        except BaseException as e:
             with self._lock:
                 self._compact_scheduled = False
-            raise
+            # same halt-and-resume contract as flushes: the classified
+            # error surfaces on wait_idle(); resume() reschedules
+            raise self._set_bg_error(e, op="compact")
 
     def maybe_compact(self):
         if self._compaction_sink is not None or self._async:
@@ -830,6 +969,7 @@ class LsmDB:
             # must leave the store exactly as it was
             raise IOError("compaction input failed CRC verification; "
                           "inputs retained")
+        faults.fire("compact.install")
         edit = VersionEdit(
             deleted=[(job.level, f.file_no) for f in job.inputs_lo] +
                     [(job.level + 1, f.file_no) for f in job.inputs_hi],
@@ -853,6 +993,8 @@ class LsmDB:
         c["compact_sort_seconds"].add(es.sort_seconds)
         if getattr(es, "batched", False):
             c["batched_compactions"].inc()
+        if getattr(es, "fallback", False):
+            c["engine_fallbacks"].inc()
         for f in job.all_inputs:
             try:
                 os.remove(f.path)
@@ -892,7 +1034,8 @@ class LsmDB:
                     raise IOError(
                         "immutable memtables not draining; an earlier "
                         "background flush failed (data remains readable "
-                        "from the queued memtable)")
+                        "from the queued memtable; call resume() to "
+                        "retry the flush)")
 
     def close(self):
         # claim the close under the lock: concurrent/double close becomes

@@ -1,0 +1,386 @@
+"""Failpoint fault-injection registry + background-error taxonomy.
+
+Every failure path in the store is rewired through two primitives that
+live here:
+
+* **Failpoints** -- named injection sites compiled into the write and
+  engine paths (``wal.append``, ``sst.rename``, ``engine.launch``, ...).
+  A failpoint is free when disarmed (one dict probe under a lock); armed
+  via ``DBConfig(failpoints=...)``, the ``REPRO_FAILPOINTS`` environment
+  variable, or the scoped :meth:`FailpointRegistry.active` context
+  manager, it can raise a recoverable error, simulate process death, or
+  direct the site to tear the write in half first (see the action table
+  below).  The crash-consistency matrix (``repro.testing.crashmatrix``)
+  drives the full ``failpoint x {sync, async, sharded}`` grid.
+
+* **Error severity** -- :func:`classify` maps an exception to
+  ``"transient"`` (worth retrying: I/O hiccups, injected soft faults) or
+  ``"hard"`` (retry cannot help: checksum mismatches, corruption,
+  logic errors).  :class:`BackgroundError` carries that verdict on the
+  store's ``bg_error`` so ``LsmDB.resume()`` and the retry/backoff
+  helpers can tell recoverable stalls from real damage.
+
+Failpoint spec grammar (comma-separated)::
+
+    name=action[:pRATE][:aAFTER][:xCOUNT]
+
+    wal.append=torn               tear the next WAL record, then "die"
+    flush.build=raise:x2          first two flush builds fail transiently
+    engine.launch=raise:p0.5      each device launch fails with prob 0.5
+    manifest.append=crash:a3      3 appends succeed, the 4th "dies"
+
+Actions:
+
+====== ==============================================================
+raise  raise ``FaultInjected(severity="transient")`` at the site
+hard   raise ``FaultInjected(severity="hard")``
+crash  raise :class:`SimulatedCrash` (a ``BaseException`` -- ordinary
+       ``except Exception`` recovery code cannot swallow it, exactly
+       like a real ``kill -9`` cannot be caught)
+torn   ``fire()`` returns ``TORN``; the site writes a partial prefix,
+       flushes it, then raises :class:`SimulatedCrash`
+off    disarmed (placeholder; same as not installing the point)
+====== ==============================================================
+
+See docs/robustness.md for the full failpoint catalog.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+import os
+import random
+import threading
+import time
+
+# ---------------------------------------------------------------------------
+# exceptions
+
+TORN = "torn"
+
+_ACTIONS = ("raise", "hard", "crash", "torn", "off")
+
+#: Every failpoint compiled into the store, and where it fires.
+KNOWN_POINTS = {
+    "wal.append": "WALWriter.append, before the record is framed",
+    "wal.fsync": "WALWriter.append, before fsync of a synced record",
+    "sst.write": "write_sst, while the .tmp payload is being written",
+    "sst.rename": "write_sst, between .tmp fsync and os.replace",
+    "manifest.append": "VersionSet.log_and_apply, while appending records",
+    "shards.write": "ShardedDB boundary persist, writing SHARDS.json.tmp",
+    "engine.launch": "device compaction, before the kernel launch",
+    "engine.crc": "device compaction, at the post-launch CRC verdict",
+    "cache.insert": "BlockCache.put, before inserting a decoded block",
+    "flush.build": "background flush, before building the SST image",
+    "compact.install": "LsmDB.apply_compaction, before installing outputs",
+    "compact.round": "GlobalCompactionQueue drain round, before picking jobs",
+}
+
+
+class FaultInjected(IOError):
+    """Raised at an armed failpoint; carries the severity verdict."""
+
+    def __init__(self, point: str, severity: str = "transient"):
+        super().__init__(f"injected fault at failpoint {point!r} ({severity})")
+        self.point = point
+        self.severity = severity
+
+
+class SimulatedCrash(BaseException):
+    """Simulated process death at a failpoint.
+
+    Deliberately a ``BaseException``: recovery code that catches
+    ``Exception`` must not be able to "handle" a crash -- the only valid
+    response is what a real crash gets, i.e. reopen (+ repair).
+    """
+
+    def __init__(self, point: str):
+        super().__init__(f"simulated process death at failpoint {point!r}")
+        self.point = point
+
+
+class BackgroundError(IOError):
+    """A classified background failure parked on the store's ``bg_error``.
+
+    ``severity == "transient"`` means the in-line retries were exhausted
+    but the failure class is recoverable -- ``LsmDB.resume()`` will
+    restart the pipeline.  ``"hard"`` means retrying cannot help
+    (corruption, checksum mismatch); resume() still clears the error,
+    but the operator should run repair first.
+    """
+
+    def __init__(self, op: str, cause: BaseException):
+        self.op = op
+        self.cause = cause
+        self.severity = classify(cause)
+        super().__init__(
+            f"background {op} failed ({self.severity}): {cause!r}; "
+            f"call resume() to restart the pipeline "
+            f"(see docs/robustness.md)")
+
+
+def classify(err: BaseException) -> str:
+    """Severity verdict for a background failure: transient or hard.
+
+    Injected faults carry an explicit verdict; checksum/corruption
+    failures are hard (retrying re-reads the same bad bytes); other
+    I/O errors are transient (the canonical retryable class); anything
+    else -- assertion failures, type errors -- is a logic bug: hard.
+    """
+    if isinstance(err, BackgroundError):
+        return err.severity
+    if isinstance(err, FaultInjected):
+        return err.severity
+    msg = str(err).lower()
+    if "checksum" in msg or "crc" in msg or "corrupt" in msg:
+        return "hard"
+    if isinstance(err, OSError):
+        return "transient"
+    return "hard"
+
+
+# ---------------------------------------------------------------------------
+# retry/backoff
+
+def backoff_delays(retries: int, base_s: float, *, factor: float = 2.0,
+                   jitter: float = 0.5, rng=random):
+    """``retries`` exponentially-growing sleep delays with jitter."""
+    for i in range(retries):
+        yield base_s * factor ** i * (1.0 + jitter * rng.random())
+
+
+def with_retries(fn, *, retries: int = 3, base_s: float = 0.005,
+                 on_retry=None):
+    """Call ``fn()``; retry transient failures with backoff + jitter.
+
+    Hard failures and :class:`SimulatedCrash` (a ``BaseException``)
+    propagate immediately; transient ones are retried up to ``retries``
+    times, sleeping an exponentially growing jittered delay before each
+    attempt.  ``on_retry`` (if given) is called once per retry -- the
+    hook for the ``lsm.bg_retries`` counter.
+    """
+    delays = backoff_delays(retries, base_s)
+    for attempt in range(retries + 1):
+        try:
+            return fn()
+        except Exception as e:
+            if classify(e) != "transient" or attempt == retries:
+                raise
+            if on_retry is not None:
+                on_retry()
+            time.sleep(next(delays))
+
+
+# ---------------------------------------------------------------------------
+# registry
+
+@dataclasses.dataclass
+class _Spec:
+    """One armed failpoint (mutable counters guarded by the registry)."""
+
+    action: str
+    rate: float = 1.0       # fire probability once armed
+    after: int = 0          # skip this many evaluations before arming
+    count: int | None = None    # max fires (None = unlimited)
+    hits: int = 0           # evaluations seen by this spec
+    fires: int = 0          # times this spec actually fired
+
+
+def _parse_one(name: str, val) -> _Spec:
+    if isinstance(val, _Spec):
+        return dataclasses.replace(val)
+    if isinstance(val, (tuple, list)):
+        action, *rest = val
+        spec = _Spec(str(action))
+        if len(rest) > 0 and rest[0] is not None:
+            spec.rate = float(rest[0])
+        if len(rest) > 1 and rest[1] is not None:
+            spec.after = int(rest[1])
+        if len(rest) > 2 and rest[2] is not None:
+            spec.count = int(rest[2])
+    else:
+        parts = str(val).split(":")
+        spec = _Spec(parts[0])
+        for mod in parts[1:]:
+            if mod.startswith("p"):
+                spec.rate = float(mod[1:])
+            elif mod.startswith("a"):
+                spec.after = int(mod[1:])
+            elif mod.startswith("x"):
+                spec.count = int(mod[1:])
+            else:
+                raise ValueError(
+                    f"bad failpoint modifier {mod!r} in {name}={val!r} "
+                    f"(expected p<rate>, a<after>, or x<count>)")
+    if spec.action not in _ACTIONS:
+        raise ValueError(
+            f"unknown failpoint action {spec.action!r} for {name!r} "
+            f"(one of {', '.join(_ACTIONS)})")
+    if not 0.0 <= spec.rate <= 1.0:
+        raise ValueError(f"failpoint rate out of [0,1] for {name!r}: {spec.rate}")
+    return spec
+
+
+def parse_failpoints(spec) -> dict[str, _Spec]:
+    """Normalise a spec string/dict into ``{name: _Spec}``.
+
+    Accepts ``"a=raise,b=torn:x1"`` strings (the env-var form), dicts
+    of ``name -> "action:mods"`` strings, or dicts of
+    ``name -> (action, rate, after, count)`` tuples.  Unknown point
+    names are rejected -- a typo'd failpoint that never fires would
+    silently turn a fault test into a no-op.
+    """
+    if spec is None:
+        return {}
+    items: list[tuple[str, object]]
+    if isinstance(spec, str):
+        items = []
+        for part in spec.split(","):
+            part = part.strip()
+            if not part:
+                continue
+            if "=" not in part:
+                raise ValueError(f"bad failpoint spec {part!r} (want name=action)")
+            name, val = part.split("=", 1)
+            items.append((name.strip(), val.strip()))
+    else:
+        items = list(spec.items())
+    out = {}
+    for name, val in items:
+        if name not in KNOWN_POINTS:
+            raise ValueError(
+                f"unknown failpoint {name!r} (known: {', '.join(sorted(KNOWN_POINTS))})")
+        out[name] = _parse_one(name, val)
+    return out
+
+
+class FailpointRegistry:
+    """Thread-safe registry of armed failpoints.
+
+    One process-global instance (:data:`FAILPOINTS`) backs every
+    injection site; tests scope injection with :meth:`active` so specs
+    never leak between cases.  ``fire()`` is the only hot call: a dict
+    probe under the lock when nothing is armed.
+    """
+
+    def __init__(self, spec=None, *, seed: int = 0xFA17):
+        self._lock = threading.Lock()
+        self._specs: dict[str, _Spec] = parse_failpoints(spec)  # guarded-by: _lock
+        self._fired: dict[str, int] = {}    # guarded-by: _lock  (survives clear())
+        self._rng = random.Random(seed)     # guarded-by: _lock
+
+    def install(self, spec) -> None:
+        """Arm failpoints from a spec string/dict (merges over existing)."""
+        parsed = parse_failpoints(spec)
+        with self._lock:
+            self._specs.update(parsed)
+
+    def clear(self, *names: str) -> None:
+        """Disarm the named failpoints (all of them when none given)."""
+        with self._lock:
+            if not names:
+                self._specs.clear()
+            else:
+                for n in names:
+                    self._specs.pop(n, None)
+
+    def reseed(self, seed: int) -> None:
+        """Re-seed the probability RNG (deterministic chaos benches)."""
+        with self._lock:
+            self._rng = random.Random(seed)
+
+    def fired(self, name: str) -> int:
+        """Total fires for ``name`` over the registry's lifetime."""
+        with self._lock:
+            return self._fired.get(name, 0)
+
+    def fire_counts(self) -> dict[str, int]:
+        with self._lock:
+            return dict(self._fired)
+
+    @contextlib.contextmanager
+    def active(self, spec):
+        """Scoped injection: install ``spec``, restore prior state on exit."""
+        parsed = parse_failpoints(spec)
+        with self._lock:
+            saved = {n: self._specs.get(n) for n in parsed}
+            self._specs.update(parsed)
+        try:
+            yield self
+        finally:
+            with self._lock:
+                for n, prior in saved.items():
+                    if prior is None:
+                        self._specs.pop(n, None)
+                    else:
+                        self._specs[n] = prior
+
+    def fire(self, name: str):
+        """Evaluate failpoint ``name`` at its injection site.
+
+        Returns ``None`` (disarmed / not triggered) or :data:`TORN`
+        (the site must tear its write, then raise
+        ``SimulatedCrash(name)``); raises per the armed action.
+        """
+        with self._lock:
+            spec = self._specs.get(name)
+            if spec is None or spec.action == "off":
+                return None
+            spec.hits += 1
+            if spec.hits <= spec.after:
+                return None
+            if spec.count is not None and spec.fires >= spec.count:
+                return None
+            if spec.rate < 1.0 and self._rng.random() >= spec.rate:
+                return None
+            spec.fires += 1
+            self._fired[name] = self._fired.get(name, 0) + 1
+            action = spec.action
+        if action == "raise":
+            raise FaultInjected(name, "transient")
+        if action == "hard":
+            raise FaultInjected(name, "hard")
+        if action == "crash":
+            raise SimulatedCrash(name)
+        return TORN
+
+
+#: Process-global registry behind every injection site; ``REPRO_FAILPOINTS``
+#: arms points for the whole process (crash-matrix child runs, chaos CI).
+FAILPOINTS = FailpointRegistry(os.environ.get("REPRO_FAILPOINTS") or None)
+
+
+def fire(name: str):
+    """Module-level shorthand for ``FAILPOINTS.fire(name)``."""
+    return FAILPOINTS.fire(name)
+
+
+# ---------------------------------------------------------------------------
+# durability helper shared by the write paths
+
+def fsync_dir(path: str) -> None:
+    """fsync a directory so a rename/create inside it survives a crash.
+
+    POSIX only makes renamed/created *names* durable once the parent
+    directory's entry is flushed; writing the file's bytes is not
+    enough.  Some filesystems reject ``fsync`` on a directory fd
+    (EINVAL) -- ignored, matching LevelDB's env behaviour.
+    """
+    try:
+        fd = os.open(path, os.O_RDONLY)
+    except OSError:
+        return
+    try:
+        os.fsync(fd)
+    except OSError:
+        pass
+    finally:
+        os.close(fd)
+
+
+# REPRO_SANITIZE=1 turns the guarded-by annotations above into runtime
+# assertions (see repro.analysis.sanitize); free when unset.
+from repro.analysis.sanitize import maybe_instrument as _maybe_instrument  # noqa: E402
+
+_maybe_instrument(FailpointRegistry)

@@ -33,7 +33,7 @@ import json
 import os
 
 from repro.core.background import GlobalCompactionQueue
-from repro.lsm import ReadOptions
+from repro.lsm import ReadOptions, faults
 from repro.lsm.db import DBConfig, DBStats, LsmDB, make_engine
 from repro.obs.metrics import MetricsRegistry
 from repro.obs.trace import NULL_TRACER
@@ -102,6 +102,10 @@ class ShardedDB:
                  sample_keys=None):
         self.path = path
         self.cfg = cfg or DBConfig()
+        # arm failpoints before the boundary-table write so shards.write
+        # can fire at store creation (shards install again; idempotent)
+        if self.cfg.failpoints is not None:
+            faults.FAILPOINTS.install(self.cfg.failpoints)
         os.makedirs(path, exist_ok=True)
         self.boundaries = self._load_or_init_boundaries(
             shards, boundaries, sample_keys)
@@ -141,8 +145,23 @@ class ShardedDB:
             raise
         self._closed = False
 
+    @classmethod
+    def open(cls, path: str, cfg: DBConfig | None = None, *,
+             repair: bool = False, **kw) -> "ShardedDB":
+        """Open a sharded store, optionally running offline repair on
+        every shard directory first (see ``repro.lsm.repair``)."""
+        if repair and os.path.isdir(path):
+            from repro.lsm import repair as repair_mod
+            repair_mod.repair_sharded(path)
+        return cls(path, cfg, **kw)
+
     def _load_or_init_boundaries(self, shards, boundaries, sample_keys):
         meta_path = os.path.join(self.path, SHARDS_FILE)
+        stale_tmp = meta_path + ".tmp"
+        if os.path.exists(stale_tmp):
+            # leftover from a crash mid-write; the rename never happened,
+            # so the table (or its absence) on disk is authoritative
+            os.remove(stale_tmp)
         if os.path.exists(meta_path):
             with open(meta_path) as f:
                 stored = [bytes.fromhex(h)
@@ -176,11 +195,19 @@ class ShardedDB:
         else:
             cuts = uniform_boundaries(shards)
         tmp = meta_path + ".tmp"
+        payload = json.dumps({"boundaries": [b.hex() for b in cuts]})
         with open(tmp, "w") as f:
-            json.dump({"boundaries": [b.hex() for b in cuts]}, f)
+            if faults.fire("shards.write") is faults.TORN:
+                # torn boundary table: only the .tmp is damaged, so a
+                # reopen re-derives the table and sibling shards are safe
+                f.write(payload[: max(1, len(payload) // 2)])
+                f.flush()
+                raise faults.SimulatedCrash("shards.write")
+            f.write(payload)
             f.flush()
             os.fsync(f.fileno())
         os.replace(tmp, meta_path)   # atomic: a crash leaves old-or-new
+        faults.fsync_dir(self.path)
         return cuts
 
     # ------------------------------------------------------------------
@@ -269,6 +296,14 @@ class ShardedDB:
         for s in self.shards:
             s.wait_idle()
         self.queue.wait_idle()
+
+    def resume(self) -> bool:
+        """Clear background errors on every shard and requeue their stuck
+        work (``LsmDB.resume`` per shard).  One shard's hard failure
+        never poisons its siblings -- they keep serving while the failed
+        shard stays halted until this is called.  Returns True if any
+        shard had an error to clear."""
+        return any([s.resume() for s in self.shards])
 
     def close(self):
         if self._closed:

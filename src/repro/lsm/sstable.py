@@ -41,6 +41,7 @@ import numpy as np
 
 from repro.core import formats
 from repro.core.formats import SSTGeometry, SSTImage
+from repro.lsm import faults
 
 MAGIC = b"LUDASST1"
 SENTINEL = np.uint32(0xFFFFFFFF)   # all-ones key: sorts after any real key
@@ -107,10 +108,17 @@ def write_sst(path: str, img: SSTImage, file_no: int) -> FileMeta:
     payload += struct.pack("<I", binascii.crc32(payload) & 0xFFFFFFFF)
     tmp = path + ".tmp"
     with open(tmp, "wb") as f:
+        if faults.fire("sst.write") is faults.TORN:
+            f.write(payload[: max(1, len(payload) // 2)])
+            f.flush()
+            raise faults.SimulatedCrash("sst.write")
         f.write(payload)
         f.flush()
         os.fsync(f.fileno())
+    faults.fire("sst.rename")   # a crash here leaves a complete orphan .tmp
     os.replace(tmp, path)  # atomic install
+    # rename durability: the new name must survive a crash, not just the bytes
+    faults.fsync_dir(os.path.dirname(path) or ".")
 
     smallest, largest, n_entries = image_bounds(img)
     return FileMeta(file_no=file_no, path=path,
@@ -289,6 +297,7 @@ class BlockCache:
     def put(self, file_no: int, block: int, blk: DecodedBlock):
         if self.capacity <= 0:
             return
+        faults.fire("cache.insert")
         with self._lock:
             self._c[(file_no, block)] = blk
             while len(self._c) > self.capacity:

@@ -13,6 +13,7 @@ import dataclasses
 import json
 import os
 
+from repro.lsm import faults
 from repro.lsm.sstable import FileMeta
 
 NUM_LEVELS = 7
@@ -67,9 +68,13 @@ class VersionSet:
     # -- persistence ------------------------------------------------------
 
     def open(self):
-        if os.path.exists(self.manifest_path):
+        existed = os.path.exists(self.manifest_path)
+        if existed:
             self._recover()
         self._manifest = open(self.manifest_path, "a")
+        if not existed:
+            # a crash right after creation must not lose the manifest name
+            faults.fsync_dir(self.db_dir)
 
     def _recover(self):
         with open(self.manifest_path) as f:
@@ -82,6 +87,11 @@ class VersionSet:
                 except json.JSONDecodeError:
                     break  # torn tail
                 self._apply_record(rec)
+        # A torn tail can drop the trailing "meta" record of an edit whose
+        # "add" records survived: never hand out a file number that an
+        # already-recovered file is using.
+        for _, fm in self.current.all_files():
+            self.next_file_no = max(self.next_file_no, fm.file_no + 1)
 
     def _apply_record(self, rec, version: Version | None = None):
         v = version if version is not None else self.current
@@ -118,8 +128,13 @@ class VersionSet:
         if edit.compact_pointer is not None:
             recs.append(dict(op="ptr", level=edit.compact_pointer[0],
                              key=edit.compact_pointer[1]))
-        for rec in recs:
-            self._manifest.write(json.dumps(rec) + "\n")
+        payload = "".join(json.dumps(rec) + "\n" for rec in recs)
+        if faults.fire("manifest.append") is faults.TORN:
+            # tear mid-record: the tail must be discarded on recovery
+            self._manifest.write(payload[: max(1, len(payload) - 7)])
+            self._manifest.flush()
+            raise faults.SimulatedCrash("manifest.append")
+        self._manifest.write(payload)
         self._manifest.flush()
         os.fsync(self._manifest.fileno())
         # copy-on-write: apply to a clone, then swap.  Readers holding the
@@ -138,3 +153,31 @@ class VersionSet:
     def close(self):
         if self._manifest:
             self._manifest.close()
+
+
+# -- repair helpers (repro.lsm.repair) ------------------------------------
+
+def write_manifest_snapshot(db_dir: str, version: Version, *,
+                            last_seq: int, next_file_no: int,
+                            compact_pointer: dict[int, bytes] | None = None):
+    """Atomically replace MANIFEST with a compacted snapshot of ``version``.
+
+    Used by repair after dropping references to quarantined/missing
+    files: the rewritten log holds one "add" per surviving file plus the
+    counters, written via tmp + rename + dir fsync so a crash during
+    repair leaves either the old or the new manifest, never a hybrid.
+    """
+    path = os.path.join(db_dir, "MANIFEST")
+    recs = []
+    for level, fm in version.all_files():
+        recs.append(dict(op="add", level=level, file=fm.to_json()))
+    recs.append(dict(op="meta", last_seq=last_seq, next_file_no=next_file_no))
+    for level, key in (compact_pointer or {}).items():
+        recs.append(dict(op="ptr", level=level, key=key.hex()))
+    tmp = path + ".tmp"
+    with open(tmp, "w") as f:
+        f.write("".join(json.dumps(r) + "\n" for r in recs))
+        f.flush()
+        os.fsync(f.fileno())
+    os.replace(tmp, path)
+    faults.fsync_dir(db_dir)

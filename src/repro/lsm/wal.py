@@ -6,6 +6,12 @@ Record layout (little-endian):
   u32 seq
   u16 klen | key bytes
   u32 vlen | value bytes (empty for delete)
+
+With ``sync=True`` every append is flushed + fsynced before the put is
+acknowledged, and the log's *name* is made durable by fsyncing the
+parent directory at creation -- the discipline the crash-consistency
+matrix (docs/robustness.md) relies on.  Failpoints: ``wal.append``
+(torn record), ``wal.fsync`` (die before the fsync).
 """
 
 from __future__ import annotations
@@ -15,6 +21,8 @@ import os
 import struct
 from typing import Iterator
 
+from repro.lsm import faults
+
 PUT, DELETE = 1, 0
 
 
@@ -23,15 +31,24 @@ class WALWriter:
         self.path = path
         self._f = open(path, "ab")
         self._sync = sync
+        if sync:
+            # the created file's directory entry must survive a crash too
+            faults.fsync_dir(os.path.dirname(path) or ".")
 
     def append(self, kind: int, seq: int, key: bytes, value: bytes = b""):
         body = struct.pack("<BI", kind, seq)
         body += struct.pack("<H", len(key)) + key
         body += struct.pack("<I", len(value)) + value
         rec = struct.pack("<I", binascii.crc32(body) & 0xFFFFFFFF) + body
-        self._f.write(struct.pack("<I", len(rec)) + rec)
+        framed = struct.pack("<I", len(rec)) + rec
+        if faults.fire("wal.append") is faults.TORN:
+            self._f.write(framed[: max(1, len(framed) // 2)])
+            self._f.flush()
+            raise faults.SimulatedCrash("wal.append")
+        self._f.write(framed)
         if self._sync:
             self._f.flush()
+            faults.fire("wal.fsync")
             os.fsync(self._f.fileno())
 
     def flush(self):
@@ -39,6 +56,29 @@ class WALWriter:
 
     def close(self):
         self._f.close()
+
+
+def valid_prefix(path: str) -> int:
+    """Byte length of the longest valid record prefix of the log.
+
+    Everything past this offset is a torn or corrupt tail; repair
+    truncates the file here so later appends cannot resurrect garbage.
+    """
+    if not os.path.exists(path):
+        return 0
+    with open(path, "rb") as f:
+        data = f.read()
+    off = 0
+    while off + 4 <= len(data):
+        (rec_len,) = struct.unpack_from("<I", data, off)
+        if off + 4 + rec_len > len(data):
+            break  # torn tail
+        rec = data[off + 4: off + 4 + rec_len]
+        (crc,) = struct.unpack_from("<I", rec, 0)
+        if binascii.crc32(rec[4:]) & 0xFFFFFFFF != crc:
+            break  # corrupt tail
+        off += 4 + rec_len
+    return off
 
 
 def replay(path: str) -> Iterator[tuple[int, int, bytes, bytes]]:

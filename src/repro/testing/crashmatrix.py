@@ -1,0 +1,329 @@
+"""Crash-consistency matrix: kill the store at every failpoint, reopen,
+assert the acked-write invariant.
+
+For each cell of ``failpoint x {sync, async, sharded}`` the harness runs
+a scripted write workload against a live store armed with one failpoint
+(``torn`` or ``crash`` action, single fire), treats the resulting
+:class:`~repro.lsm.faults.SimulatedCrash` as process death, snapshots
+the directory *as the dead process left it*, reopens the snapshot with
+``repair=True``, and checks:
+
+* **durability** -- every acknowledged ``put`` survives with its exact
+  value (the one in-flight write may land old-or-new, never partial);
+* **integrity** -- a full scan returns strictly-increasing unique keys,
+  each one either acknowledged or the in-flight key (no duplicate or
+  resurrected rows);
+* **liveness** -- the reopened store accepts new writes.
+
+Cells whose failpoint cannot fire in a mode (e.g. ``compact.round``
+without the sharded queue) are skipped explicitly, never silently.
+
+CLI (the ``fault-matrix`` CI job)::
+
+    python -m repro.testing.crashmatrix                 # full matrix
+    python -m repro.testing.crashmatrix --points wal.append,sst.write
+    python -m repro.testing.crashmatrix --modes sync --n 300
+    python -m repro.testing.crashmatrix --sabotage      # self-test: MUST fail
+
+``--sabotage`` corrupts a referenced SST in the crash image before
+recovery; repair quarantines it, acked rows vanish, and the harness
+must exit non-zero -- CI inverts the exit code to prove the wall is
+actually load-bearing (see docs/robustness.md).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import os
+import shutil
+import tempfile
+import time
+
+from repro.lsm import faults
+from repro.lsm.db import DBConfig, LsmDB
+from repro.lsm.sharded import ShardedDB
+
+MODES = ("sync", "async", "sharded")
+
+#: Per-point armed spec: one fire, placed so acked data already exists.
+DEFAULT_SPECS = {
+    "wal.append": "torn:a150:x1",
+    "wal.fsync": "crash:a150:x1",
+    "sst.write": "torn:a1:x1",
+    "sst.rename": "crash:a1:x1",
+    "manifest.append": "torn:a1:x1",
+    "flush.build": "crash:a1:x1",
+    "compact.install": "crash:x1",
+    "compact.round": "crash:a1:x1",
+    "shards.write": "torn:x1",
+}
+
+#: Points that can fire per mode (compact.round / shards.write need the
+#: sharded queue; everything else fires in any mode).
+MODE_POINTS = {
+    "sync": ["wal.append", "wal.fsync", "sst.write", "sst.rename",
+             "manifest.append", "flush.build", "compact.install"],
+    "async": ["wal.append", "wal.fsync", "sst.write", "sst.rename",
+              "manifest.append", "flush.build", "compact.install"],
+    "sharded": ["wal.append", "wal.fsync", "sst.write", "sst.rename",
+                "manifest.append", "flush.build", "compact.install",
+                "compact.round", "shards.write"],
+}
+
+
+@dataclasses.dataclass
+class CellResult:
+    point: str
+    mode: str
+    crashed: bool = False       # the injected kill actually happened
+    acked: int = 0              # puts acknowledged before death
+    errors: list[str] = dataclasses.field(default_factory=list)
+
+    @property
+    def ok(self) -> bool:
+        return not self.errors
+
+    def line(self) -> str:
+        status = "PASS" if self.ok else "FAIL"
+        crash = "crashed" if self.crashed else "no-fire"
+        msg = f"{status}  {self.mode:8s} {self.point:18s} " \
+              f"[{crash}, {self.acked} acked]"
+        for e in self.errors:
+            msg += f"\n        - {e}"
+        return msg
+
+
+def _open_store(path: str, mode: str, *, failpoints=None, repair=False):
+    cfg = DBConfig(engine="cpu", sync_writes=True, memtable_bytes=640,
+                   async_compaction=(mode == "async"),
+                   failpoints=failpoints)
+    if mode == "sharded":
+        return ShardedDB.open(path, cfg, repair=repair,
+                              boundaries=None if os.path.exists(
+                                  os.path.join(path, "SHARDS.json"))
+                              else [b"k00300"])
+    return LsmDB.open(path, cfg, repair=repair)
+
+
+def _quiesce(db) -> None:
+    """Best-effort: let surviving background workers finish so the crash
+    image is a settled disk state (a real kill freezes every thread at
+    once; here only the injected one died)."""
+    execs = []
+    for holder in [db] + list(getattr(db, "shards", [])):
+        for name in ("_flush_exec", "_compact_exec"):
+            ex = getattr(holder, name, None)
+            if ex is not None:
+                execs.append(ex)
+    queue = getattr(db, "queue", None)
+    if queue is not None:
+        execs.append(queue._exec)
+    for ex in execs:
+        try:
+            ex.wait_idle(timeout=10.0)
+        except BaseException:   # noqa: BLE001 - includes the crash itself
+            pass
+
+
+def _abandon(db) -> None:
+    """Drop a 'dead' store without close() (close would flush -- a dead
+    process cannot).  Only releases file handles and stops threads."""
+    for holder in [db] + list(getattr(db, "shards", [])):
+        for name in ("_flush_exec", "_compact_exec"):
+            ex = getattr(holder, name, None)
+            if ex is not None:
+                try:
+                    ex.shutdown(wait=False)
+                except BaseException:   # noqa: BLE001
+                    pass
+        w = getattr(holder, "_wal", None)
+        if w is not None:
+            try:
+                w.close()
+            except BaseException:   # noqa: BLE001
+                pass
+    queue = getattr(db, "queue", None)
+    if queue is not None:
+        try:
+            queue.close()
+        except BaseException:   # noqa: BLE001
+            pass
+
+
+def _corrupt_one_sst(image: str) -> str | None:
+    """Sabotage helper: flip bytes in the middle of the first SST found
+    (recursing into shard dirs).  Returns the path, or None."""
+    for root, _, files in os.walk(image):
+        for name in sorted(files):
+            if name.endswith(".sst"):
+                p = os.path.join(root, name)
+                size = os.path.getsize(p)
+                with open(p, "r+b") as f:
+                    f.seek(size // 2)
+                    chunk = f.read(8)
+                    f.seek(size // 2)
+                    f.write(bytes(b ^ 0xFF for b in chunk))
+                return p
+    return None
+
+
+def run_cell(point: str, mode: str, *, n: int = 600,
+             sabotage: bool = False, workdir: str | None = None
+             ) -> CellResult:
+    """One matrix cell: workload + injected kill + snapshot + recovery
+    + invariant checks."""
+    res = CellResult(point=point, mode=mode)
+    spec = {point: DEFAULT_SPECS[point]}
+    top = workdir or tempfile.mkdtemp(prefix=f"crashmatrix-{mode}-")
+    live = os.path.join(top, "live")
+    image = os.path.join(top, "image")
+
+    oracle: dict[bytes, bytes] = {}
+    inflight: tuple[bytes, bytes] | None = None
+    db = None
+    try:
+        db = _open_store(live, mode, failpoints=spec)
+        for i in range(n):
+            # coprime stride interleaves the key space so successive
+            # memtables overlap -- compactions are real merges, not
+            # trivial moves (which would bypass compact.install)
+            j = (i * 7919) % n
+            k = b"k%05d" % j
+            v = b"v%05d.%d" % (j, 0)
+            if i % 10 == 5 and i >= 10:     # overwrite an acked key
+                j = ((i - 7) * 7919) % n
+                k = b"k%05d" % j
+                v = b"v%05d.%d" % (j, 1)
+            inflight = (k, v)
+            db.put(k, v)
+            oracle[k] = v
+            inflight = None
+        db.flush()
+        db.wait_idle()
+    except BaseException as e:  # noqa: BLE001 - the injected kill
+        res.crashed = True
+        if not isinstance(e, faults.SimulatedCrash) and \
+                faults.FAILPOINTS.fired(point) == 0:
+            res.errors.append(f"workload died without firing: {e!r}")
+    finally:
+        faults.FAILPOINTS.clear()
+    res.acked = len(oracle)
+    if not res.crashed:
+        res.errors.append("failpoint never fired (workload survived)")
+        if db is not None:
+            db.close()
+            db = None
+    if db is not None:
+        _quiesce(db)
+        shutil.copytree(live, image)    # the disk as the dead process left it
+        _abandon(db)
+    else:
+        shutil.copytree(live, image)
+    # the dead process's disk is GONE: recovery must work from the image
+    # alone (the manifest may record absolute paths into the old dir --
+    # repair rewrites them; deleting proves nothing reads through)
+    shutil.rmtree(live, ignore_errors=True)
+
+    if sabotage:
+        _corrupt_one_sst(image)
+
+    # -- recovery + invariants ------------------------------------------
+    db2 = None
+    try:
+        db2 = _open_store(image, mode, repair=True)
+        for k, want in oracle.items():
+            got = db2.get(k)
+            if got != want:
+                res.errors.append(
+                    f"acked key {k!r} lost or wrong: {got!r} != {want!r}")
+                if len(res.errors) > 5:
+                    break
+        if inflight is not None and inflight[0] not in oracle:
+            got = db2.get(inflight[0])
+            if got not in (None, inflight[1]):
+                res.errors.append(
+                    f"in-flight key {inflight[0]!r} partial: {got!r}")
+        rows = db2.scan(b"", b"\xff" * 8)
+        prev = None
+        allowed = set(oracle)
+        if inflight is not None:
+            allowed.add(inflight[0])
+        for k, v in rows:
+            if prev is not None and k <= prev:
+                res.errors.append(f"scan not strictly increasing at {k!r}")
+                break
+            prev = k
+            if k not in allowed:
+                res.errors.append(f"resurrected/unknown key {k!r}")
+                break
+        # liveness: the recovered store accepts new writes
+        db2.put(b"zz.post-recovery", b"ok")
+        if db2.get(b"zz.post-recovery") != b"ok":
+            res.errors.append("recovered store rejected a new write")
+    except BaseException as e:  # noqa: BLE001 - any recovery failure
+        res.errors.append(f"recovery failed: {e!r}")
+    finally:
+        if db2 is not None:
+            try:
+                db2.close()
+            except BaseException as e:  # noqa: BLE001
+                res.errors.append(f"close after recovery failed: {e!r}")
+        if workdir is None:
+            shutil.rmtree(top, ignore_errors=True)
+    return res
+
+
+def run_matrix(points=None, modes=None, *, n: int = 600,
+               sabotage: bool = False, verbose: bool = True
+               ) -> list[CellResult]:
+    """Run the (sub)matrix; returns one :class:`CellResult` per cell."""
+    modes = list(modes or MODES)
+    results = []
+    for mode in modes:
+        eligible = MODE_POINTS[mode]
+        for point in (points or eligible):
+            if point not in eligible:
+                continue
+            t0 = time.perf_counter()
+            res = run_cell(point, mode, n=n, sabotage=sabotage)
+            if verbose:
+                print(f"{res.line()}  ({time.perf_counter() - t0:.1f}s)",
+                      flush=True)
+            results.append(res)
+    return results
+
+
+def main(argv=None) -> int:
+    import argparse
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.testing.crashmatrix",
+        description="Crash-consistency matrix: kill at every failpoint, "
+                    "reopen with repair, assert acked writes survive.")
+    ap.add_argument("--points", help="comma-separated failpoint subset")
+    ap.add_argument("--modes", help=f"comma-separated subset of {MODES}")
+    ap.add_argument("--n", type=int, default=600,
+                    help="workload size per cell (default 600)")
+    ap.add_argument("--sabotage", action="store_true",
+                    help="corrupt an SST in the crash image first "
+                         "(self-test: the run MUST fail)")
+    args = ap.parse_args(argv)
+    points = args.points.split(",") if args.points else None
+    modes = args.modes.split(",") if args.modes else None
+    if modes:
+        for m in modes:
+            if m not in MODES:
+                ap.error(f"unknown mode {m!r} (one of {MODES})")
+    if points:
+        for p in points:
+            if p not in DEFAULT_SPECS:
+                ap.error(f"unknown matrix point {p!r} "
+                         f"(one of {sorted(DEFAULT_SPECS)})")
+    results = run_matrix(points, modes, n=args.n, sabotage=args.sabotage)
+    failed = [r for r in results if not r.ok]
+    print(f"\ncrash matrix: {len(results) - len(failed)}/{len(results)} "
+          f"cells green")
+    return 1 if failed else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -202,8 +202,9 @@ def test_background_error_surfaces_in_wait_idle(tmp_path):
         raise RuntimeError("injected flush failure")
     db.engine.build_image = broken_build
     # the error surfaces on the next rotation's submit or at wait_idle,
-    # whichever comes first (background failures must not pass silently)
-    with pytest.raises(RuntimeError, match="injected flush failure"):
+    # whichever comes first (background failures must not pass silently),
+    # wrapped as a classified, resume-able BackgroundError (an IOError)
+    with pytest.raises(IOError, match="injected flush failure"):
         for i in range(60):
             db.put(b"e%04d" % i, b"z" * 16)
         db.wait_idle()

@@ -196,15 +196,19 @@ def test_crash_mid_compaction_edit_logged_inputs_still_on_disk(tmp_path):
     assert state["snapped"], "no compaction ran"
     db.close()
 
+    # stale (already-compacted-away) inputs sit on disk in the snapshot;
+    # open-time orphan GC must delete exactly those and report them
+    on_disk_before = {int(f.split(".")[0]) for f in os.listdir(crash_dir)
+                      if f.endswith(".sst")}
     db2 = LsmDB(crash_dir, rcfg(auto_compact=False))
     for k, v in model.items():
         assert db2.get(k) == v, k
-    # stale (already-compacted-away) inputs exist on disk but are not in
-    # the recovered version
     live = {fm.file_no for _, fm in db2.versions.current.all_files()}
-    on_disk = {int(f.split(".")[0]) for f in os.listdir(crash_dir)
-               if f.endswith(".sst")}
-    assert on_disk - live, "snapshot did not capture stale inputs"
+    assert on_disk_before - live, "snapshot did not capture stale inputs"
+    on_disk_after = {int(f.split(".")[0]) for f in os.listdir(crash_dir)
+                     if f.endswith(".sst")}
+    assert on_disk_after == live, "orphan GC left stale inputs behind"
+    assert db2.stats.orphans_removed >= len(on_disk_before - live)
     db2.close()
 
 
