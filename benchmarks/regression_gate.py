@@ -117,11 +117,39 @@ def _ycsb_rows() -> dict:
     }
 
 
+def _serve_rows() -> dict:
+    """Session-resume smoke row for the gate.
+
+    ``serve.resume.p99_cpu_smoke``: batched ``load_many`` tail latency
+    per session on the LSM session-store backend -- the two-wave
+    multi_get resume path behind ``ServeEngine.load_sessions``.  The
+    row also enforces correctness directly: the batched states must be
+    bit-identical to the scalar ``load`` loop (and to what was saved),
+    or the emit aborts -- a fast wrong resume is not a benchmark."""
+    from benchmarks.serve_bench import measure_resume
+    rep = measure_resume("lsm", "cpu", sessions=12, resume_batch=6,
+                         saves=2, state_kb=4, reps=3)
+    if rep["mismatches"]:
+        raise AssertionError(
+            f"serve smoke: {rep['mismatches']} batched resume states "
+            "differ from the scalar oracle -- the batched page-in path "
+            "is wrong, not slow")
+    return {
+        "serve.resume.p99_cpu_smoke": {
+            "us": rep["batched_p99_us"],
+            "derived": (f"sessions=12;batch=6;saves=2;state_kb=4;lsm;"
+                        f"write_batches={rep['stats']['write_batches']};"
+                        f"reclaimed={rep['stats']['entries_dropped']}"),
+        },
+    }
+
+
 def emit(out_path: str, iters: int = 1) -> dict:
     from benchmarks.kernel_bench import bench_kernels
     rows = {name: {"us": us, "derived": derived}
             for name, us, derived in bench_kernels(iters=iters)}
     rows.update(_ycsb_rows())
+    rows.update(_serve_rows())
     doc = {
         "rows": rows,
         "meta": {

@@ -36,15 +36,29 @@ def main():
     for i, row in enumerate(out):
         print(f"  req{i}: {row.tolist()}")
 
-    print("paging session to the LSM store ...")
-    n = eng.save_session("demo", cache, pos)
+    print("paging sessions to the LSM store (one write_batch each) ...")
+    names = [f"demo-{i}" for i in range(4)]
+    n = 0
+    for name in names:
+        n += eng.save_session(name, cache, pos)
     print(f"  {n} KV records written; store stats: "
-          f"flushes={store.stats.flushes}")
-    cache2, pos2 = eng.load_session("demo")
+          f"flushes={store.stats.flushes} "
+          f"write_batches={store.stats.write_batches}")
+    cache2, pos2 = eng.load_session(names[0])
     ok = all(bool((np.asarray(a) == np.asarray(b)).all())
              for a, b in zip(jax.tree.leaves(cache),
                              jax.tree.leaves(cache2)))
     print(f"  reloaded bit-exact: {ok}")
+
+    print("batched resume: load_sessions = two multi_get waves ...")
+    batched = eng.load_sessions(names)
+    ok = all(
+        np.asarray(a).tobytes() == np.asarray(b).tobytes()
+        for bc, bp in batched
+        for a, b in zip(jax.tree.leaves((bc, bp)),
+                        jax.tree.leaves((cache2, pos2))))
+    print(f"  {len(batched)} sessions resumed, bit-exact: {ok}")
+    eng.drop_session(names[-1])    # head + chunks in one write_batch
 
     store.flush()
     store.maybe_compact()

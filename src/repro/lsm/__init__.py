@@ -9,7 +9,10 @@ multithreaded baseline).
 The read surface is uniform across every level of the stack: ``LsmDB``,
 ``ShardedDB`` and ``TableReader`` all expose ``get(key, opts=None)``,
 ``multi_get(keys, opts=None)`` and ``scan(start, end, opts=None)`` taking
-the same frozen ``ReadOptions`` (see docs/read_path.md).
+the same frozen ``ReadOptions`` (see docs/read_path.md).  The write
+surface mirrors it: ``put(key, value, opts=None)``, ``delete(key,
+opts=None)`` and the atomic ``write_batch(ops, opts=None)`` take the
+same frozen ``WriteOptions`` on both DB classes (docs/serving.md).
 """
 
 from __future__ import annotations
@@ -52,6 +55,32 @@ class ReadOptions:
 
 #: Default options singleton (avoids per-get allocation on the hot path).
 DEFAULT_READ_OPTIONS = ReadOptions()
+
+
+@dataclasses.dataclass(frozen=True)
+class WriteOptions:
+    """Options shared by every write entry point (``put`` / ``delete`` /
+    ``write_batch`` on ``LsmDB`` and ``ShardedDB``) -- the write-side
+    mirror of ``ReadOptions``.
+
+    * ``sync`` -- per-call durability override: ``True`` fsyncs this
+      record before acknowledging even on a store opened with
+      ``sync_writes=False``; ``False`` skips the fsync on a synced
+      store (for bulk loads whose tail the caller re-writes anyway);
+      ``None`` (default) follows ``DBConfig.sync_writes``.
+    * ``wait_stall`` -- when the immutable-memtable queue is full an
+      async-mode write normally blocks until background flushes drain
+      it.  ``wait_stall=False`` raises ``IOError`` immediately instead,
+      so latency-sensitive callers can shed load rather than park a
+      thread behind a stalled pipeline.
+    """
+
+    sync: bool | None = None
+    wait_stall: bool = True
+
+
+#: Default options singleton (avoids per-put allocation on the hot path).
+DEFAULT_WRITE_OPTIONS = WriteOptions()
 
 
 def __getattr__(name):  # lazy: avoids core.scheduler <-> lsm.db cycle

@@ -32,7 +32,8 @@ from repro.core.background import BackgroundExecutor, InstallSequencer
 from repro.core.formats import SSTGeometry, SSTImage
 from repro.core.scheduler import (CompactionJob, CompactionScheduler,
                                   SchedulerConfig)
-from repro.lsm import DEFAULT_READ_OPTIONS, ReadOptions
+from repro.lsm import (DEFAULT_READ_OPTIONS, DEFAULT_WRITE_OPTIONS,
+                       ReadOptions, WriteOptions)
 from repro.lsm import cpu_engine as ce
 from repro.lsm import faults
 from repro.lsm import memtable
@@ -89,6 +90,8 @@ class DBStats:
     background flush/compaction threads are race-free."""
 
     puts: int = 0
+    write_batches: int = 0         # write_batch() calls
+    batch_ops: int = 0             # ops applied through write_batch()
     gets: int = 0
     multi_gets: int = 0            # multi_get() calls
     multi_get_keys: int = 0        # keys resolved through multi_get()
@@ -256,6 +259,8 @@ class LsmDB:
                                              op="get", **labels)
         self._h_multi_get = self.metrics.histogram("lsm.op.latency_us",
                                                    op="multi_get", **labels)
+        self._h_write_batch = self.metrics.histogram(
+            "lsm.op.latency_us", op="write_batch", **labels)
         self._g_imm = self.metrics.gauge("lsm.imm_queue.depth", **labels)
         self._g_debt = self.metrics.gauge("lsm.compaction.debt", **labels)
         # 0 = healthy, 1 = transient bg_error (resume() recovers),
@@ -341,19 +346,31 @@ class LsmDB:
     # writes
     # ------------------------------------------------------------------
 
-    def put(self, key: bytes, value: bytes):
-        assert len(key) <= self.geom.key_bytes
+    def _check_key(self, key: bytes):
+        if len(key) > self.geom.key_bytes:
+            raise ValueError(f"key too long ({len(key)} > "
+                             f"{self.geom.key_bytes} bytes)")
         if key.endswith(b"\x00") or not key:
             raise ValueError("keys must be non-empty and not end with NUL "
                              "(fixed-width key format)")
-        assert len(value) <= self.geom.value_bytes - 4
+
+    def _check_value(self, value: bytes):
+        if len(value) > self.geom.value_bytes - 4:
+            raise ValueError(f"value too long ({len(value)} > "
+                             f"{self.geom.value_bytes - 4} bytes)")
+
+    def put(self, key: bytes, value: bytes,
+            opts: WriteOptions | None = None):
+        opts = opts or DEFAULT_WRITE_OPTIONS
+        self._check_key(key)
+        self._check_value(value)
         t0 = time.perf_counter_ns()
         with self._lock:
             self._check_open_locked()
             seq = self._next_seq()
-            self._wal.append(wal.PUT, seq, key, value)
+            self._wal.append(wal.PUT, seq, key, value, sync=opts.sync)
             self.mem.put(key, seq, value)
-            self._maybe_flush_locked()
+            self._maybe_flush_locked(wait_stall=opts.wait_stall)
         # hot path: an atomic counter bump and a lock-free histogram
         # append (drained lazily) -- see tests/test_obs.py overhead check
         dt = time.perf_counter_ns() - t0
@@ -363,14 +380,81 @@ class LsmDB:
         if tr.enabled:
             tr.complete("db.put", t0, dt)
 
-    def delete(self, key: bytes):
+    def delete(self, key: bytes, opts: WriteOptions | None = None):
+        opts = opts or DEFAULT_WRITE_OPTIONS
         with self._lock:
             self._check_open_locked()
             seq = self._next_seq()
-            self._wal.append(wal.DELETE, seq, key)
+            self._wal.append(wal.DELETE, seq, key, sync=opts.sync)
             self.mem.delete(key, seq)
-            self._maybe_flush_locked()
+            self._maybe_flush_locked(wait_stall=opts.wait_stall)
         self._c["deletes"].inc()
+
+    @staticmethod
+    def _normalize_batch(ops) -> list[tuple[int, bytes, bytes]]:
+        """Normalize ``write_batch`` ops into WAL ``(kind, key, value)``
+        rows.  Accepts ``("put", key, value)`` and ``("delete", key)``."""
+        out = []
+        for op in ops:
+            if op[0] == "put":
+                _, key, value = op
+                out.append((wal.PUT, key, value))
+            elif op[0] == "delete":
+                out.append((wal.DELETE, op[1], b""))
+            else:
+                raise ValueError(f"unknown batch op {op[0]!r} "
+                                 "(want 'put' or 'delete')")
+        return out
+
+    def write_batch(self, ops, opts: WriteOptions | None = None) -> int:
+        """Atomically apply a group of writes.
+
+        ``ops``: iterable of ``("put", key, value)`` / ``("delete", key)``
+        tuples, applied in order (a later op on the same key wins).  The
+        whole batch is ONE CRC-framed WAL record and one locked memtable
+        apply: after a crash, replay recovers either every op or none --
+        a torn or unsynced record discards the batch wholesale, never a
+        prefix (docs/serving.md).  Returns the number of ops applied.
+
+        Atomicity is with respect to *crash recovery*: a concurrent
+        reader racing the apply may observe a prefix of the batch (the
+        store's reads are lock-free by design, same as put)."""
+        opts = opts or DEFAULT_WRITE_OPTIONS
+        rows = self._normalize_batch(ops)
+        # validate everything BEFORE the first side effect: a bad op must
+        # reject the whole batch, not tear it
+        for kind, key, value in rows:
+            self._check_key(key)
+            if kind == wal.PUT:
+                self._check_value(value)
+        if not rows:
+            return 0
+        t0 = time.perf_counter_ns()
+        with self._lock:
+            self._check_open_locked()
+            first_seq = self.versions.last_seq + 1
+            self.versions.last_seq += len(rows)
+            self._wal.append_batch(rows, first_seq, sync=opts.sync)
+            # crash window: the WAL record is durable but the memtable is
+            # not -- replay on reopen applies the whole batch (all ops or,
+            # had the append torn, none)
+            faults.fire("db.write_batch")
+            for i, (kind, key, value) in enumerate(rows):
+                if kind == wal.PUT:
+                    self.mem.put(key, first_seq + i, value)
+                else:
+                    self.mem.delete(key, first_seq + i)
+            self._maybe_flush_locked(wait_stall=opts.wait_stall)
+        dt = time.perf_counter_ns() - t0
+        self._c["write_batches"].inc()
+        self._c["batch_ops"].inc(len(rows))
+        self._h_write_batch.pend(dt / 1000.0)
+        tr = self.tracer
+        if tr.enabled:
+            tr.complete("db.write_batch", t0, dt,
+                        args={"n_ops": len(rows),
+                              **(self._span_args or {})})
+        return len(rows)
 
     def _check_open_locked(self):
         """Writes after ``close()`` must fail loudly: the WAL handle is
@@ -384,17 +468,17 @@ class LsmDB:
         self.versions.last_seq += 1
         return self.versions.last_seq
 
-    def _maybe_flush_locked(self):
+    def _maybe_flush_locked(self, wait_stall: bool = True):
         if self.mem.approx_bytes < self._memtable_limit:
             return
         if self._async:
-            self._rotate_locked()
+            self._rotate_locked(wait_stall=wait_stall)
         else:
             self.flush()
             if self.cfg.auto_compact:
                 self.maybe_compact()
 
-    def _rotate_locked(self):
+    def _rotate_locked(self, wait_stall: bool = True):
         """Move the active memtable onto the immutable queue (O(1): close +
         rename the WAL segment) and hand it to a flush worker."""
         # surface any earlier background-flush failure BEFORE mutating
@@ -407,6 +491,14 @@ class LsmDB:
                           "to restart the pipeline")
         tr = self.tracer
         while len(self.imm) >= self.cfg.max_pending_memtables:
+            if not wait_stall:
+                # WriteOptions(wait_stall=False): shed load instead of
+                # parking the writer behind the flush pipeline.  The
+                # triggering write is already durable in the WAL + active
+                # memtable -- only the rotation is refused.
+                raise IOError(
+                    "write stall: immutable-memtable queue is full and "
+                    "WriteOptions.wait_stall is False")
             self._c["write_stalls"].inc()
             self._sample_pressure_locked()
             t_stall = time.perf_counter_ns()

@@ -73,6 +73,8 @@ KNOWN_POINTS = {
     "engine.crc": "device compaction, at the post-launch CRC verdict",
     "cache.insert": "BlockCache.put, before inserting a decoded block",
     "flush.build": "background flush, before building the SST image",
+    "db.write_batch": "LsmDB.write_batch, after the WAL record is "
+                      "written, before the memtable apply",
     "compact.install": "LsmDB.apply_compaction, before installing outputs",
     "compact.round": "GlobalCompactionQueue drain round, before picking jobs",
 }

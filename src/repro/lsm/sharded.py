@@ -33,7 +33,7 @@ import json
 import os
 
 from repro.core.background import GlobalCompactionQueue
-from repro.lsm import ReadOptions, faults
+from repro.lsm import ReadOptions, WriteOptions, faults
 from repro.lsm.db import DBConfig, DBStats, LsmDB, make_engine
 from repro.obs.metrics import MetricsRegistry
 from repro.obs.trace import NULL_TRACER
@@ -233,8 +233,33 @@ class ShardedDB:
         return ShardedSnapshot(shards=tuple(s.snapshot()
                                             for s in self.shards))
 
-    def put(self, key: bytes, value: bytes):
-        self.shards[self.shard_of(key)].put(key, value)
+    def put(self, key: bytes, value: bytes,
+            opts: WriteOptions | None = None):
+        self.shards[self.shard_of(key)].put(key, value, opts)
+
+    def write_batch(self, ops, opts: WriteOptions | None = None) -> int:
+        """Apply a group of writes, routed by key: ops are split into one
+        sub-batch per shard (preserving in-order semantics within each)
+        and each sub-batch commits atomically via that shard's
+        ``LsmDB.write_batch``.
+
+        Atomicity is therefore **per shard**: a crash between two shards'
+        commits can land one sub-batch without the other -- exactly the
+        two-independent-DBs semantics of every other cross-shard
+        operation here.  Callers needing whole-batch crash atomicity
+        (the session store) arrange for all keys of one atomic unit to
+        share a routing prefix, so the batch maps to a single shard
+        (docs/serving.md)."""
+        from repro.lsm.db import LsmDB
+        ops = list(ops)
+        rows = LsmDB._normalize_batch(ops)
+        by_shard: dict[int, list] = {}
+        for op, (_, key, _) in zip(ops, rows):
+            by_shard.setdefault(self.shard_of(key), []).append(op)
+        n = 0
+        for i, sub in sorted(by_shard.items()):
+            n += self.shards[i].write_batch(sub, opts)
+        return n
 
     def get(self, key: bytes, opts: ReadOptions | None = None):
         i = self.shard_of(key)
@@ -258,8 +283,8 @@ class ShardedDB:
                 out[slot] = value
         return out
 
-    def delete(self, key: bytes):
-        self.shards[self.shard_of(key)].delete(key)
+    def delete(self, key: bytes, opts: WriteOptions | None = None):
+        self.shards[self.shard_of(key)].delete(key, opts)
 
     def scan(self, start: bytes, end: bytes,
              opts: ReadOptions | None = None):

@@ -21,9 +21,9 @@ point for point reads.  Metadata (raw arrays, per-block first keys, bloom
 rows) loads lazily on first touch; individual blocks decode on demand
 through a shared ``BlockCache``, so a point lookup pays for one block,
 never the whole file.  ``TableReader.get/multi_get/scan`` mirror the
-``LsmDB``/``ShardedDB`` signatures.  The old pair of entry points
-(``DecodedTable.get`` and the eager whole-file ``TableCache.get``) is
-deprecated in favor of ``TableCache.reader``.
+``LsmDB``/``ShardedDB`` signatures.  (The pre-protocol entry points --
+``DecodedTable.get`` and the eager whole-file ``TableCache.get`` --
+finished their deprecation cycle and are gone.)
 """
 
 from __future__ import annotations
@@ -34,7 +34,6 @@ import dataclasses
 import os
 import struct
 import threading
-import warnings
 from collections import OrderedDict
 
 import numpy as np
@@ -176,72 +175,6 @@ def read_sst(path: str) -> SSTImage:
     bloom = take((g, w), "<u4")
     return SSTImage(keys=keys, meta=meta, vals=vals, shared=shared,
                     nvalid=nvalid, crc=crc, bloom=bloom)
-
-
-@dataclasses.dataclass
-class DecodedTable:
-    """Host-side fully-decoded view of one SST.
-
-    .. deprecated:: superseded by ``TableReader`` (lazy, block-granular,
-       cache-aware) -- kept only behind the deprecated whole-file
-       ``TableCache.get`` entry point."""
-    keys_bytes: list          # trimmed user keys, sorted
-    seqs: np.ndarray
-    is_value: np.ndarray
-    vals: np.ndarray          # uint32 [n, vw]
-    bloom: np.ndarray
-    bloom_probes: int
-    key_bytes: int
-
-    def get(self, key: bytes):
-        """(found, value|None).  Newest version of key in this table.
-
-        .. deprecated:: use ``TableReader.get(key, opts)`` /
-           ``TableReader.probe(key, opts)``."""
-        warnings.warn(
-            "DecodedTable.get is deprecated; use TableCache.reader(meta)"
-            ".get(key, opts) -- the TableReader protocol is the single "
-            "decode entry point for point reads", DeprecationWarning,
-            stacklevel=2)
-        i = bisect.bisect_left(self.keys_bytes, key)
-        if i == len(self.keys_bytes) or self.keys_bytes[i] != key:
-            return False, None
-        # entries sorted (key asc, seq desc) -> i is the newest
-        if not self.is_value[i]:
-            return True, None
-        return True, formats.unpack_value_bytes(self.vals[i])
-
-
-def decode_table(img: SSTImage, geom: SSTGeometry | None = None
-                 ) -> DecodedTable:
-    """Decode for point lookups (host read path -- numpy mirrors of the
-    device kernels; the device unpack stays on the compaction path where
-    the batch sizes justify offload)."""
-    from repro.lsm import cpu_engine as ce
-    if geom is None:
-        geom = SSTGeometry()  # restart_interval is the only field used
-    img_np = SSTImage(*(np.asarray(a) for a in img))
-    b, k, lanes = img_np.keys.shape
-    crc_ok = (ce.np_crc_blocks(ce.np_wire_words(img_np)) ==
-              np.asarray(img_np.crc, np.uint32)).all()
-    if not crc_ok:
-        raise IOError("SST block checksum mismatch")
-    keys = ce.np_prefix_decode(
-        np.asarray(img_np.shared).reshape(b * k),
-        np.asarray(img_np.keys, np.uint32).reshape(b * k, lanes),
-        geom.restart_interval)
-    valid = (np.arange(k)[None, :] <
-             np.asarray(img_np.nvalid)[:, None]).reshape(b * k)
-    meta = np.asarray(img_np.meta, np.uint32).reshape(b * k)[valid]
-    kb = [formats.unpack_key_bytes(r).rstrip(b"\x00") for r in keys[valid]]
-    return DecodedTable(
-        keys_bytes=kb, seqs=meta >> 1,
-        is_value=(meta & 1).astype(bool),
-        vals=np.asarray(img_np.vals, np.uint32).reshape(
-            b * k, -1)[valid],
-        bloom=np.asarray(img_np.bloom),
-        bloom_probes=SSTGeometry().bloom_probes,
-        key_bytes=lanes * 4)
 
 
 @dataclasses.dataclass
@@ -540,8 +473,7 @@ class TableCache:
     (thread-safe: the async write path has readers, flush workers and the
     compaction worker sharing it).
 
-    ``reader(meta)`` is the supported entry point; the eager whole-file
-    ``get(meta, geom)`` is deprecated."""
+    ``reader(meta)`` is the single entry point."""
 
     def __init__(self, capacity: int = 64, *,
                  geom: SSTGeometry | None = None,
@@ -567,19 +499,6 @@ class TableCache:
             while len(self._c) > self.capacity:
                 self._c.popitem(last=False)
             return rdr
-
-    def get(self, meta: FileMeta, geom: SSTGeometry) -> DecodedTable:
-        """Eagerly decode the whole table.
-
-        .. deprecated:: use ``reader(meta)`` -- the ``TableReader``
-           protocol decodes lazily per block and shares the block cache
-           with the batched read path."""
-        warnings.warn(
-            "TableCache.get is deprecated; use TableCache.reader(meta) "
-            "-- TableReader is the single decode entry point (lazy, "
-            "block-granular, shared with the batched multi_get path)",
-            DeprecationWarning, stacklevel=2)
-        return decode_table(read_sst(meta.path), geom)
 
     def drop(self, file_no: int):
         with self._lock:

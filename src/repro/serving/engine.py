@@ -1,10 +1,12 @@
-"""Batched serving engine with LSM-paged KV sessions.
+"""Batched serving engine with pluggable session paging.
 
 ``ServeEngine.generate`` runs prefill + greedy decode for a batch of
-equal-length prompts.  Sessions (the KV cache of a conversation) can be
-paged out to the LSM store and paged back in later -- long-lived sessions
-churn the store exactly like the paper's YCSB updates, and the
-device-offloaded compaction reclaims superseded pages.
+equal-length prompts.  Sessions (the KV cache of a conversation) are
+paged out through a ``SessionStore`` backend (see
+``repro.serving.session_store``) -- by default ``LsmSessionStore``
+wrapping the given LSM store, so long-lived sessions churn the store
+exactly like the paper's YCSB updates and the device-offloaded
+compaction reclaims superseded pages.
 """
 
 from __future__ import annotations
@@ -15,27 +17,39 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.lsm.db import LsmDB
 from repro.models import model
 from repro.models.config import ModelConfig
 from repro.obs.metrics import NULL_REGISTRY
 from repro.obs.trace import NULL_TRACER
+from repro.serving.session_store import LsmSessionStore
 
 
 class ServeEngine:
     def __init__(self, cfg: ModelConfig, params, *, max_len: int = 256,
-                 page_store: LsmDB | None = None, metrics=None,
+                 page_store=None, session_store=None, metrics=None,
                  tracer=None):
+        """``session_store`` is any ``SessionStore``; ``page_store`` is
+        the legacy spelling -- an ``LsmDB``/``ShardedDB`` that gets
+        wrapped in an ``LsmSessionStore`` with this engine's state
+        template.  Pass at most one of the two."""
+        if page_store is not None and session_store is not None:
+            raise ValueError("pass page_store or session_store, not both")
         self.cfg = cfg
         self.params = params
         self.max_len = max_len
-        self.store = page_store
+        if session_store is None and page_store is not None:
+            session_store = LsmSessionStore(page_store, self._state_template)
+        self.sessions = session_store
+        # .store keeps pointing at the underlying LSM handle (tests and
+        # benches reach through it for flush/compact/stats)
+        self.store = (page_store if page_store is not None
+                      else getattr(session_store, "db", None))
         # default to the page store's registry/tracer so serving spans
         # land in the same trace as the store's flush/compaction spans
         if metrics is None:
-            metrics = getattr(page_store, "metrics", None)
+            metrics = getattr(self.store, "metrics", None)
         if tracer is None:
-            tracer = getattr(page_store, "tracer", None)
+            tracer = getattr(self.store, "tracer", None)
         self.metrics = metrics if metrics is not None else NULL_REGISTRY
         self.tracer = tracer if tracer is not None else NULL_TRACER
         self._h_gen = self.metrics.histogram(
@@ -45,8 +59,16 @@ class ServeEngine:
                                              op="page_out")
         self._h_in = self.metrics.histogram("serve.op.latency_us",
                                             op="page_in")
+        self._h_in_many = self.metrics.histogram("serve.op.latency_us",
+                                                 op="page_in_many")
         self._decode = jax.jit(
             lambda p, c, t, pos: model.decode_step(p, c, t, pos, cfg))
+
+    def _state_template(self):
+        # only the tree STRUCTURE is used; leaf shapes come from the
+        # stored metadata, so batch size 1 is fine for any saved batch
+        return (model.init_cache(self.cfg, 1, self.max_len),
+                jnp.zeros((1, 1), jnp.int32))
 
     # ----------------------------------------------------------- generate
 
@@ -85,81 +107,39 @@ class ServeEngine:
 
     # ------------------------------------------------------- KV paging
 
-    def _page_key(self, session: str, i: int) -> bytes:
-        import hashlib
-        h = hashlib.blake2b(session.encode(), digest_size=8).digest()
-        # odd low byte: fixed-width LSM keys must not end in NUL
-        return h + ((i << 1) | 1).to_bytes(8, "big")
-
     def save_session(self, session: str, cache, pos) -> int:
-        """Page the session KV cache into the LSM store.  Returns the
-        number of KV records written."""
-        assert self.store is not None, "no page store configured"
+        """Page the session state out through the session store.
+        Returns the number of records written (backend-defined)."""
+        assert self.sessions is not None, "no session store configured"
         t0 = time.perf_counter_ns()
         with self.tracer.span("serve.page_out", session=session):
-            count = self._save_session_inner(session, cache, pos)
+            count = self.sessions.save(session, (cache, pos))
         self._h_out.pend((time.perf_counter_ns() - t0) / 1000.0)
         return count
 
-    def _save_session_inner(self, session: str, cache, pos) -> int:
-        leaves, treedef = jax.tree.flatten((cache, pos))
-        blobs = []
-        for leaf in leaves:
-            arr = np.asarray(leaf)
-            blobs.append((str(arr.dtype), arr.shape, arr.tobytes()))
-        payload = self.store.geom.value_bytes - 8
-        count = 0
-        import json
-        meta = json.dumps([(d, list(s), len(b)) for d, s, b in blobs])
-        chunks = [meta.encode()[i:i + payload]
-                  for i in range(0, len(meta), payload)]
-        raw = b"".join(b for _, _, b in blobs)
-        chunks += [raw[i:i + payload] for i in range(0, len(raw), payload)]
-        self.store.put(self._page_key(session, 0),
-                       len(chunks).to_bytes(4, "big")
-                       + len(meta).to_bytes(4, "big"))
-        for i, ch in enumerate(chunks):
-            self.store.put(self._page_key(session, i + 1), ch)
-            count += 1
-        return count
-
     def load_session(self, session: str):
-        assert self.store is not None
+        """Page one session back in; raises ``KeyError`` if absent."""
+        assert self.sessions is not None, "no session store configured"
         t0 = time.perf_counter_ns()
         with self.tracer.span("serve.page_in", session=session):
-            out = self._load_session_inner(session)
+            cache, pos = self.sessions.load(session)
         self._h_in.pend((time.perf_counter_ns() - t0) / 1000.0)
-        return out
-
-    def _load_session_inner(self, session: str):
-        import json
-        head = self.store.get(self._page_key(session, 0))
-        if head is None:
-            raise KeyError(f"no session {session!r}")
-        n_chunks = int.from_bytes(head[:4], "big")
-        meta_len = int.from_bytes(head[4:8], "big")
-        raw = b"".join(self.store.get(self._page_key(session, i + 1))
-                       for i in range(n_chunks))
-        meta = json.loads(raw[:meta_len])
-        body = raw[meta_len:]
-        leaves = []
-        off = 0
-        for dtype, shape, nbytes in meta:
-            arr = np.frombuffer(body[off:off + nbytes], dtype=dtype)
-            leaves.append(jnp.asarray(arr.reshape(shape)))
-            off += nbytes
-        # rebuild treedef from a fresh abstract cache
-        cache0 = model.init_cache(self.cfg, leaves and 1 or 1, self.max_len)
-        _, treedef = jax.tree.flatten(
-            (cache0, jnp.zeros((1, 1), jnp.int32)))
-        # leaf count must match; shapes come from the stored meta
-        cache, pos = jax.tree.unflatten(treedef, leaves)
         return cache, pos
 
-    def drop_session(self, session: str):
-        head = self.store.get(self._page_key(session, 0))
-        if head is None:
-            return
-        n_chunks = int.from_bytes(head[:4], "big")
-        for i in range(n_chunks + 1):
-            self.store.delete(self._page_key(session, i))
+    def load_sessions(self, sessions, *, missing_ok: bool = False):
+        """Batched resume: ``load_many`` on the backend collapses the
+        per-session reads into two multi_get waves on the LSM backend.
+        Returns ``[(cache, pos) | None, ...]`` aligned with input."""
+        assert self.sessions is not None, "no session store configured"
+        sessions = list(sessions)
+        t0 = time.perf_counter_ns()
+        with self.tracer.span("serve.page_in_many", n=len(sessions)):
+            out = self.sessions.load_many(sessions, missing_ok=missing_ok)
+        self._h_in_many.pend((time.perf_counter_ns() - t0) / 1000.0)
+        return out
+
+    def drop_session(self, session: str) -> bool:
+        """Remove a paged session (head + all chunks, atomically on the
+        LSM backend).  Returns True if it existed."""
+        assert self.sessions is not None, "no session store configured"
+        return self.sessions.drop(session)

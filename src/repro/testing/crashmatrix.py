@@ -10,8 +10,13 @@ the directory *as the dead process left it*, reopens the snapshot with
 
 * **durability** -- every acknowledged ``put`` survives with its exact
   value (the one in-flight write may land old-or-new, never partial);
+* **batch atomicity** -- the workload issues periodic 3-op
+  ``write_batch`` calls; an in-flight batch must land all-or-none
+  (every key old, or every key new -- a mix is a torn batch).  In
+  sharded mode the batch keys share a routing prefix, mirroring the
+  session-store contract (``write_batch`` is atomic per shard);
 * **integrity** -- a full scan returns strictly-increasing unique keys,
-  each one either acknowledged or the in-flight key (no duplicate or
+  each one either acknowledged or in-flight (no duplicate or
   resurrected rows);
 * **liveness** -- the reopened store accepts new writes.
 
@@ -56,18 +61,21 @@ DEFAULT_SPECS = {
     "compact.install": "crash:x1",
     "compact.round": "crash:a1:x1",
     "shards.write": "torn:x1",
+    "db.write_batch": "crash:a2:x1",
 }
 
 #: Points that can fire per mode (compact.round / shards.write need the
 #: sharded queue; everything else fires in any mode).
 MODE_POINTS = {
     "sync": ["wal.append", "wal.fsync", "sst.write", "sst.rename",
-             "manifest.append", "flush.build", "compact.install"],
+             "manifest.append", "flush.build", "compact.install",
+             "db.write_batch"],
     "async": ["wal.append", "wal.fsync", "sst.write", "sst.rename",
-              "manifest.append", "flush.build", "compact.install"],
+              "manifest.append", "flush.build", "compact.install",
+              "db.write_batch"],
     "sharded": ["wal.append", "wal.fsync", "sst.write", "sst.rename",
                 "manifest.append", "flush.build", "compact.install",
-                "compact.round", "shards.write"],
+                "compact.round", "shards.write", "db.write_batch"],
 }
 
 
@@ -180,6 +188,7 @@ def run_cell(point: str, mode: str, *, n: int = 600,
 
     oracle: dict[bytes, bytes] = {}
     inflight: tuple[bytes, bytes] | None = None
+    inflight_batch: list[tuple[bytes, bytes]] | None = None
     db = None
     try:
         db = _open_store(live, mode, failpoints=spec)
@@ -188,6 +197,21 @@ def run_cell(point: str, mode: str, *, n: int = 600,
             # memtables overlap -- compactions are real merges, not
             # trivial moves (which would bypass compact.install)
             j = (i * 7919) % n
+            if i % 9 == 4 and i >= 20:
+                # atomic group write: two fresh keys + an overwrite of a
+                # prior batch key, ONE WAL record.  All keys sort below
+                # the sharded boundary (b"k00300"), so the batch routes
+                # to one shard -- the session-store contract.
+                jp = ((i - 9) * 7919) % n
+                batch = [(b"a%05d" % j, b"av%05d" % i),
+                         (b"b%05d" % j, b"bv%05d" % i),
+                         (b"a%05d" % jp, b"a2v%05d.%d" % (jp, i))]
+                inflight_batch = batch
+                db.write_batch([("put", k, v) for k, v in batch])
+                for k, v in batch:
+                    oracle[k] = v
+                inflight_batch = None
+                continue
             k = b"k%05d" % j
             v = b"v%05d.%d" % (j, 0)
             if i % 10 == 5 and i >= 10:     # overwrite an acked key
@@ -231,23 +255,50 @@ def run_cell(point: str, mode: str, *, n: int = 600,
     db2 = None
     try:
         db2 = _open_store(image, mode, repair=True)
+        # in-flight keys are judged old-or-new below, not exact-value
+        skip: set[bytes] = set()
+        if inflight is not None:
+            skip.add(inflight[0])
+        if inflight_batch is not None:
+            skip.update(k for k, _ in inflight_batch)
         for k, want in oracle.items():
+            if k in skip:
+                continue
             got = db2.get(k)
             if got != want:
                 res.errors.append(
                     f"acked key {k!r} lost or wrong: {got!r} != {want!r}")
                 if len(res.errors) > 5:
                     break
-        if inflight is not None and inflight[0] not in oracle:
+        if inflight is not None:
             got = db2.get(inflight[0])
-            if got not in (None, inflight[1]):
+            if got not in (oracle.get(inflight[0]), inflight[1]):
                 res.errors.append(
                     f"in-flight key {inflight[0]!r} partial: {got!r}")
+        if inflight_batch is not None:
+            # all-or-nothing: every key of the un-acked batch must be
+            # its old value, or every key its new value -- never a mix
+            landed = []
+            for k, newv in inflight_batch:
+                got = db2.get(k)
+                oldv = oracle.get(k)    # pre-batch state (ack updates it)
+                if got == newv:
+                    landed.append(True)
+                elif got == oldv:
+                    landed.append(False)
+                else:
+                    res.errors.append(
+                        f"in-flight batch key {k!r} partial: {got!r}")
+            if True in landed and False in landed:
+                res.errors.append(
+                    f"in-flight batch torn: landed={landed}")
         rows = db2.scan(b"", b"\xff" * 8)
         prev = None
         allowed = set(oracle)
         if inflight is not None:
             allowed.add(inflight[0])
+        if inflight_batch is not None:
+            allowed.update(k for k, _ in inflight_batch)
         for k, v in rows:
             if prev is not None and k <= prev:
                 res.errors.append(f"scan not strictly increasing at {k!r}")

@@ -358,16 +358,18 @@ def test_table_reader_lazy_load(tmp_path):
     db.close()
 
 
-def test_deprecated_entry_points_warn(tmp_path):
+def test_removed_entry_points_are_gone(tmp_path):
+    # the PR 7 deprecation cycle is complete: the eager whole-file
+    # decode path no longer exists, TableReader is the only entry point
+    from repro.lsm import sstable
+    assert not hasattr(sstable, "DecodedTable")
+    assert not hasattr(sstable, "decode_table")
     db = LsmDB(str(tmp_path / "db"), cfg())
     db.put(b"w", b"1")
     db.flush()
     fm = next(fm for _, fm in db.versions.current.all_files())
-    with pytest.warns(DeprecationWarning, match="TableCache.reader"):
-        tbl = db.cache.get(fm, GEOM)
-    with pytest.warns(DeprecationWarning, match="TableReader"):
-        found, value = tbl.get(b"w")
-    assert (found, value) == (True, b"1")       # still correct, just loud
+    assert not hasattr(db.cache, "get")
+    assert db.cache.reader(fm).get(b"w") == b"1"
     db.close()
 
 

@@ -69,6 +69,26 @@ def test_session_page_out_and_resume(tmp_path):
     eng.store.maybe_compact()
 
 
+def test_load_sessions_batched_matches_scalar(tmp_path):
+    """Engine-level batched resume: load_sessions == a loop of
+    load_session, bit-identical, on the real model's cache pytree."""
+    eng, cfg = make_engine(tmp_path)
+    prompts = np.array([[1, 2, 3, 4]], np.int32)
+    _, cache, pos = eng.generate(prompts, max_new=3)
+    names = [f"sess-{i}" for i in range(3)]
+    for i, s in enumerate(names):
+        eng.save_session(s, jax.tree.map(lambda x: x + i, cache), pos)
+    batched = eng.load_sessions(names)
+    for s, (bc, bp) in zip(names, batched):
+        sc, sp = eng.load_session(s)
+        for a, b in zip(jax.tree.leaves((bc, bp)),
+                        jax.tree.leaves((sc, sp))):
+            assert np.asarray(a).tobytes() == np.asarray(b).tobytes()
+    assert eng.load_sessions(["sess-0", "nope"], missing_ok=True)[1] is None
+    assert eng.drop_session("sess-1") is True
+    assert eng.drop_session("sess-1") is False
+
+
 def test_session_pages_churn_compaction(tmp_path):
     """Repeated session saves supersede pages; compaction must reclaim."""
     eng, cfg = make_engine(tmp_path)

@@ -1,0 +1,252 @@
+"""Atomic ``write_batch`` + ``WriteOptions``: the group-write path.
+
+The contract: a batch is ONE WAL record and one locked memtable apply.
+Crash recovery sees every op or none -- a torn record discards the
+batch wholesale, a durable record replays it wholesale.  Validation
+happens before the first side effect, so a bad op rejects the whole
+batch.  ``WriteOptions`` threads per-call ``sync`` / ``wait_stall``
+through put/delete/write_batch on both DB classes.
+"""
+
+import shutil
+import struct
+
+import pytest
+
+from repro.core.formats import SSTGeometry
+from repro.core.scheduler import SchedulerConfig
+from repro.lsm import WriteOptions, faults
+from repro.lsm.db import DBConfig, LsmDB
+from repro.lsm.faults import SimulatedCrash
+from repro.lsm.sharded import ShardedDB
+from repro.lsm import wal
+
+GEOM = SSTGeometry(key_bytes=16, value_bytes=32, block_bytes=512,
+                   sst_bytes=2048)
+
+
+def cfg(**kw):
+    return DBConfig(
+        geom=GEOM, engine="cpu",
+        memtable_bytes=kw.pop("memtable_bytes", 600),
+        scheduler=SchedulerConfig(l0_trigger=3, base_bytes=40_000), **kw)
+
+
+def k(i):
+    return b"k%05d" % i
+
+
+# ---------------------------------------------------------------------------
+# semantics
+# ---------------------------------------------------------------------------
+
+
+def test_batch_applies_in_order_and_mixes_ops(tmp_path):
+    db = LsmDB(str(tmp_path / "db"), cfg())
+    db.put(k(0), b"old")
+    n = db.write_batch([
+        ("put", k(1), b"v1"),
+        ("delete", k(0)),
+        ("put", k(2), b"v2"),
+        ("put", k(2), b"v2b"),      # later op on same key wins
+    ])
+    assert n == 4
+    assert db.get(k(0)) is None
+    assert db.get(k(1)) == b"v1"
+    assert db.get(k(2)) == b"v2b"
+    assert db.stats.write_batches == 1
+    assert db.stats.batch_ops == 4
+    db.close()
+
+
+def test_batch_seq_allocation_interleaves_with_puts(tmp_path):
+    db = LsmDB(str(tmp_path / "db"), cfg())
+    db.put(k(0), b"a")
+    s0 = db.versions.last_seq
+    db.write_batch([("put", k(1), b"b"), ("put", k(2), b"c")])
+    assert db.versions.last_seq == s0 + 2
+    db.put(k(3), b"d")
+    assert db.versions.last_seq == s0 + 3
+    # overwrite through a batch must supersede the earlier put
+    db.write_batch([("put", k(0), b"a2")])
+    assert db.get(k(0)) == b"a2"
+    db.close()
+
+
+def test_empty_batch_is_a_noop(tmp_path):
+    db = LsmDB(str(tmp_path / "db"), cfg())
+    s0 = db.versions.last_seq
+    assert db.write_batch([]) == 0
+    assert db.versions.last_seq == s0
+    assert db.stats.write_batches == 0
+    db.close()
+
+
+def test_bad_op_rejects_whole_batch(tmp_path):
+    db = LsmDB(str(tmp_path / "db"), cfg())
+    with pytest.raises(ValueError):
+        db.write_batch([("put", k(1), b"good"),
+                        ("put", b"x" * (GEOM.key_bytes + 1), b"toolong")])
+    with pytest.raises(ValueError):
+        db.write_batch([("put", k(2), b"good"), ("frobnicate", k(3))])
+    # the valid ops of a rejected batch must NOT be visible
+    assert db.get(k(1)) is None
+    assert db.get(k(2)) is None
+    assert db.stats.write_batches == 0
+    db.close()
+
+
+def test_batch_survives_reopen(tmp_path):
+    path = str(tmp_path / "db")
+    db = LsmDB(path, cfg(sync_writes=True))
+    db.put(k(0), b"old")
+    db.write_batch([("put", k(1), b"v1"), ("delete", k(0)),
+                    ("put", k(2), b"v2")])
+    db.close()
+    db2 = LsmDB(path, cfg())
+    assert db2.get(k(0)) is None
+    assert db2.get(k(1)) == b"v1"
+    assert db2.get(k(2)) == b"v2"
+    db2.close()
+
+
+# ---------------------------------------------------------------------------
+# crash atomicity
+# ---------------------------------------------------------------------------
+
+
+def _crash_image(tmp_path, path):
+    faults.FAILPOINTS.clear()
+    crash = str(tmp_path / "crash")
+    shutil.copytree(path, crash)
+    shutil.rmtree(path)
+    return crash
+
+
+def test_torn_batch_record_discards_all_ops(tmp_path):
+    path = str(tmp_path / "db")
+    db = LsmDB(path, cfg(sync_writes=True,
+                         failpoints={"wal.append": "torn:a1:x1"}))
+    db.put(k(0), b"old")            # append #1: acked baseline
+    with pytest.raises(SimulatedCrash):
+        db.write_batch([("put", k(1), b"v1"), ("put", k(0), b"new"),
+                        ("delete", k(0))])
+    crash = _crash_image(tmp_path, path)
+    db2 = LsmDB.open(crash, cfg(), repair=True)
+    # NONE of the batch landed: old value intact, new key absent
+    assert db2.get(k(0)) == b"old"
+    assert db2.get(k(1)) is None
+    db2.close()
+
+
+def test_crash_after_wal_replays_whole_batch(tmp_path):
+    path = str(tmp_path / "db")
+    db = LsmDB(path, cfg(sync_writes=True,
+                         failpoints={"db.write_batch": "crash:x1"}))
+    db.put(k(0), b"old")
+    with pytest.raises(SimulatedCrash):
+        db.write_batch([("put", k(1), b"v1"), ("put", k(0), b"new"),
+                        ("put", k(2), b"v2")])
+    crash = _crash_image(tmp_path, path)
+    db2 = LsmDB.open(crash, cfg(), repair=True)
+    # the WAL record was durable: replay applies EVERY op
+    assert db2.get(k(0)) == b"new"
+    assert db2.get(k(1)) == b"v1"
+    assert db2.get(k(2)) == b"v2"
+    db2.close()
+
+
+def test_unknown_batch_version_refuses_replay(tmp_path):
+    path = str(tmp_path / "db")
+    db = LsmDB(path, cfg(sync_writes=True))
+    db.write_batch([("put", k(1), b"v1")])
+    wal_path = db._wal.path
+    db.close()
+    # bump the version byte in place and re-frame the CRC so only the
+    # version check can reject it
+    with open(wal_path, "rb") as f:
+        data = f.read()
+    (rec_len,) = struct.unpack_from("<I", data, 0)
+    body = bytearray(data[8:8 + rec_len - 4])
+    assert body[0] == wal.BATCH
+    body[5] = wal.BATCH_VERSION + 1
+    import binascii
+    rec = struct.pack("<I", binascii.crc32(bytes(body)) & 0xFFFFFFFF) \
+        + bytes(body)
+    with open(wal_path, "wb") as f:
+        f.write(struct.pack("<I", len(rec)) + rec)
+    with pytest.raises(IOError, match="batch record version"):
+        LsmDB(path, cfg())
+
+
+# ---------------------------------------------------------------------------
+# WriteOptions
+# ---------------------------------------------------------------------------
+
+
+def test_write_options_sync_override_roundtrip(tmp_path):
+    # per-call sync=True on an unsynced store: the record must be
+    # durable across an abandoned (un-closed) handle
+    path = str(tmp_path / "db")
+    db = LsmDB(path, cfg(sync_writes=False))
+    db.put(k(1), b"synced", WriteOptions(sync=True))
+    db.write_batch([("put", k(2), b"batched")], WriteOptions(sync=True))
+    db._wal._f.flush()              # abandon without close(): no flush
+    db2 = LsmDB(str(tmp_path / "db2"), cfg())  # keep handles distinct
+    db2.close()
+    db3 = LsmDB(path, cfg())
+    assert db3.get(k(1)) == b"synced"
+    assert db3.get(k(2)) == b"batched"
+    db3.close()
+
+
+def test_wait_stall_false_sheds_load(tmp_path):
+    # a zero-depth immutable queue stalls on the first rotation; with
+    # wait_stall=False the writer must raise instead of parking
+    db = LsmDB(str(tmp_path / "db"),
+               cfg(async_compaction=True, memtable_bytes=128,
+                   max_pending_memtables=0,
+                   failpoints={"flush.build": "raise"}))
+    with pytest.raises(IOError, match="stall"):
+        for i in range(200):
+            db.put(k(i), b"v" * 16, WriteOptions(wait_stall=False))
+    faults.FAILPOINTS.clear()
+    try:
+        db.close()
+    except Exception:
+        pass
+
+
+def test_sharded_batch_spans_shards(tmp_path):
+    db = ShardedDB.open(str(tmp_path / "db"), cfg(),
+                        boundaries=[k(100)])
+    db.put(k(0), b"old")
+    n = db.write_batch([
+        ("put", k(1), b"lo"),        # shard 0
+        ("put", k(200), b"hi"),      # shard 1
+        ("delete", k(0)),            # shard 0
+    ])
+    assert n == 3
+    assert db.get(k(0)) is None
+    assert db.get(k(1)) == b"lo"
+    assert db.get(k(200)) == b"hi"
+    # per-shard stats account every op exactly once
+    assert sum(s.stats.batch_ops for s in db.shards) == 3
+    db.close()
+
+
+def test_sharded_batch_single_shard_is_atomic_under_crash(tmp_path):
+    # keys sharing a routing prefix land in ONE shard: whole-batch
+    # atomicity holds (the session-store contract)
+    path = str(tmp_path / "db")
+    db = ShardedDB.open(path, cfg(sync_writes=True,
+                                  failpoints={"db.write_batch": "crash:x1"}),
+                        boundaries=[k(100)])
+    with pytest.raises(SimulatedCrash):
+        db.write_batch([("put", k(1), b"a"), ("put", k(2), b"b")])
+    crash = _crash_image(tmp_path, path)
+    db2 = ShardedDB.open(crash, cfg(), repair=True)
+    got = (db2.get(k(1)), db2.get(k(2)))
+    assert got in ((None, None), (b"a", b"b")), got
+    assert got == (b"a", b"b")      # crash fired after the WAL append
+    db2.close()
